@@ -1,0 +1,26 @@
+"""Roofline terms per (arch × shape) from the dry-run artifacts
+(EXPERIMENTS.md §Roofline) — emitted as CSV rows."""
+
+from __future__ import annotations
+
+from .common import emit
+
+
+def run() -> None:
+    from repro.launch.roofline import full_table
+
+    rows = full_table()
+    for r in rows:
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}",
+            r["bound_s"] * 1e6,
+            f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f};"
+            f"useful={r['useful_ratio']:.2f};GiB/dev={r['mem_per_device_GiB']:.2f};"
+            f"multi={'y' if r['multi_ok'] else 'n'}",
+        )
+    if not rows:
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun --sweep first")
+
+
+if __name__ == "__main__":
+    run()

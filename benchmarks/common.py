@@ -1,0 +1,52 @@
+"""Shared benchmark helpers: timing, CSV emit, app runners."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_it(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds of fn() over repeats."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run_app(builder, *, policy: str, accelerators=("gpu0",), n_cpu: int = 1,
+            scheduler: str = "round_robin", repeats: int = 5,
+            allocator: str = "nextfit", builder_kwargs=None) -> Dict:
+    """Build + run one radar app; returns measured/modeled time + ledger."""
+    from repro.apps.radar import make_runtime
+
+    rt, ctx = make_runtime(policy=policy, scheduler=scheduler, n_cpu=n_cpu,
+                           accelerators=accelerators, allocator=allocator)
+    bufs, tasks = builder(ctx, **(builder_kwargs or {}))
+    rt.run(tasks)  # warmup (jit compile)
+    ctx.ledger.reset()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        rt.run(tasks)
+    wall = (time.perf_counter() - t0) / repeats
+    snap = ctx.ledger.snapshot()
+    return {
+        "wall_s": wall,
+        "copies": snap["total_copies"] / repeats,
+        "bytes": snap["total_bytes"] / repeats,
+        "modeled_s": snap["modeled_seconds"] / repeats,
+        "ledger": snap,
+    }

@@ -1,0 +1,36 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: 2fft,2fzf,alloc,overhead,3zip,apps,marking,roofline")
+    args = ap.parse_args()
+    from . import (bench_2fft, bench_2fzf, bench_3zip, bench_alloc,
+                   bench_apps, bench_marking, bench_overhead, bench_roofline)
+    benches = {
+        "alloc": bench_alloc.run,
+        "overhead": lambda: bench_overhead.run(n_calls=200_000),
+        "2fft": bench_2fft.run,
+        "2fzf": bench_2fzf.run,
+        "3zip": bench_3zip.run,
+        "apps": bench_apps.run,
+        "marking": bench_marking.run,
+        "roofline": bench_roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn()
+
+
+if __name__ == "__main__":
+    main()

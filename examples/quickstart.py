@@ -1,0 +1,56 @@
+"""Quickstart: the RIMMS API on an emulated heterogeneous SoC.
+
+Mirrors the paper's Listing 4: hete_Malloc + fragment + task execution
+with runtime-managed data movement — and shows the ledger evidence of
+eliminated copies vs the host-owned reference flow (Fig 1).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.apps.radar import build_2fzf, make_runtime
+from repro.core.hete import hete_sync
+
+
+def run_policy(policy: str):
+    rt, ctx = make_runtime(policy=policy, accelerators=("fft_acc0", "zip_acc0"))
+    bufs, tasks = build_2fzf(ctx, n=256, seed=42)
+    rt.run(tasks)  # warmup/compile
+    ctx.ledger.reset()
+    wall = rt.run(tasks)
+    out = hete_sync(bufs["out"], context=ctx)
+    return out, ctx.ledger.snapshot(), wall, rt.task_log[-4:]
+
+
+def main():
+    # --- Listing-4 flavoured API tour -----------------------------------
+    from repro.core.hete import HeteContext
+
+    ctx = HeteContext()
+    M, N = 8, 128
+    inp = ctx.malloc((M * N,), np.complex64)   # hete_Malloc
+    inp.fragment(N)                            # fragment into M FFT inputs
+    inp[3].data[:] = 1.0 + 0j                  # indexed fragment access
+    print(f"allocated {M}x{N} complex buffer, fragment 3 sum =",
+          inp[3].data.sum())
+    ctx.free(inp)                              # hete_Free
+
+    # --- reference vs RIMMS on the 2FZF radar chain ----------------------
+    results = {}
+    for policy in ("reference", "rimms"):
+        out, ledger, wall, placement = run_policy(policy)
+        results[policy] = out
+        print(f"\n[{policy:9s}] copies={ledger['total_copies']} "
+              f"bytes={ledger['total_bytes']} "
+              f"modeled={ledger['modeled_seconds']*1e6:.1f}us "
+              f"wall={wall*1e6:.1f}us")
+        for pair, n in ledger["by_pair"].items():
+            print(f"    {pair}: {n}")
+    np.testing.assert_allclose(results["reference"], results["rimms"],
+                               atol=1e-4)
+    print("\nreference == rimms output ✓ (fewer copies, same math)")
+
+
+if __name__ == "__main__":
+    main()

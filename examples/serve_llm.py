@@ -1,0 +1,54 @@
+"""Serving driver: batched requests through the RIMMS paged-KV engine.
+
+A small dense LM serves a stream of prompts with continuous batching;
+KV pages come from the paper's marking systems (bitset block tables) and
+are recycled as requests complete.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_config("llama3_8b").smoke(), name="serve-demo", dtype="float32"
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(cfg, params, max_batch=4, page_size=16, num_pages=256,
+                      max_pages_per_seq=16, allocator="bitset")
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        eng.submit(rng.integers(1, cfg.vocab, size=l).tolist(),
+                   max_new_tokens=8)
+        for l in (4, 7, 3, 9, 5, 6, 4, 8)
+    ]
+    t0 = time.perf_counter()
+    steps = 0
+    while any(not r.done for r in reqs):
+        eng.step()
+        steps += 1
+    wall = time.perf_counter() - t0
+    total_new = sum(len(r.generated) for r in reqs)
+    print(f"served {len(reqs)} requests / {total_new} tokens in {steps} "
+          f"engine steps, {wall:.2f}s "
+          f"({total_new/wall:.1f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt} -> {r.generated}")
+    print(f"page pool: {eng.pool.free_pages} free of {eng.pool.num_pages} "
+          f"(fragment-allocs={eng.pool.fragment_allocs}, "
+          f"fallbacks={eng.pool.fallback_allocs})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: a llama-family LM through the full stack
+(pipeline → RIMMS-staged batches → jitted train step → checkpoints,
+preemption-safe).
+
+Presets:
+  --preset tiny   (default)  ~1M params, 60 steps — finishes on CPU in ~a minute
+  --preset 100m              ~100M params, 300 steps — the deliverable-scale
+                              run for a real machine (works on CPU, slowly)
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--preset tiny] [--steps N]
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.train.loop import Trainer, TrainerConfig
+
+PRESETS = {
+    "tiny": dict(d_model=64, n_layers=2, n_heads=4, n_kv_heads=2,
+                 head_dim=16, d_ff=128, vocab=512, batch=2, seq=64,
+                 steps=60),
+    "100m": dict(d_model=768, n_layers=12, n_heads=12, n_kv_heads=4,
+                 head_dim=64, d_ff=2048, vocab=32000, batch=8, seq=512,
+                 steps=300),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = dataclasses.replace(
+        get_config("llama3_8b"),
+        name=f"llama-{args.preset}",
+        d_model=p["d_model"], n_layers=p["n_layers"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], head_dim=p["head_dim"], d_ff=p["d_ff"],
+        vocab=p["vocab"], q_chunk=128,
+    )
+    steps = args.steps or p["steps"]
+    trainer = Trainer(
+        cfg, batch_size=p["batch"], seq_len=p["seq"],
+        tcfg=TrainerConfig(steps=steps, ckpt_every=max(steps // 4, 10),
+                           ckpt_dir=args.ckpt_dir, log_every=5),
+    )
+    trainer.install_signal_handlers()
+    report = trainer.run()
+    print("\nstep  loss     grad_norm  s/step")
+    for m in report["metrics"]:
+        print(f"{m['step']:5d} {m['loss']:8.4f} {m['grad_norm']:9.4f} "
+              f"{m['sec_per_step']:7.3f}")
+    first, last = report["metrics"][0]["loss"], report["metrics"][-1]["loss"]
+    best = min(m["loss"] for m in report["metrics"])
+    print(f"\nloss {first:.4f} → {last:.4f} (best {best:.4f}) over "
+          f"{report['final_step']} steps ({report['wall_s']:.1f}s wall, "
+          f"{report['straggler_events']} straggler events)")
+    print("batch transfers (RIMMS ledger):", report["transfers"]["by_pair"])
+    # NB: synthetic uniform tokens have an entropy floor of ln(vocab)
+    # (~6.24 nats at vocab=512) — the demo checks stability, not fit.
+    assert best <= first + 0.05, "training diverged"
+
+
+if __name__ == "__main__":
+    main()

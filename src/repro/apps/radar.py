@@ -1,0 +1,194 @@
+"""The paper's radar signal-processing applications (§4.2–4.3) on the
+RIMMS runtime: 2FFT, 2FZF, 3ZIP reference chains and the real-world
+RC / PD / SAR workloads.
+
+Every app builds (buffers, tasks) against a :class:`HeteContext`; the
+caller runs them under a :class:`Runtime` with either the ``reference``
+(host-owned) or ``rimms`` memory policy — the paper's comparisons fall
+out of the transfer ledger.
+
+PE kernels: numpy on the CPU PE; jitted jnp on accelerator PEs (the
+Pallas zip/fft kernels are the TPU-deployment versions, validated in
+tests; the emulated SoC uses the XLA path for speed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hete import HeteContext, HeteData
+from repro.core.runtime import PE, Runtime, Task, make_emulated_soc
+
+__all__ = [
+    "register_kernels", "build_2fft", "build_2fzf", "build_3zip",
+    "build_rc", "build_pd", "build_sar", "make_runtime",
+]
+
+C64 = np.complex64
+
+
+# ---------------------------------------------------------------------------
+# PE kernels
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _jfft(x):
+    return jnp.fft.fft(x, axis=-1)
+
+
+@jax.jit
+def _jifft(x):
+    return jnp.fft.ifft(x, axis=-1)
+
+
+@jax.jit
+def _jzip(a, b):
+    return a * b
+
+
+def register_kernels(rt: Runtime) -> None:
+    rt.register_kernel("fft", "cpu", lambda ins: np.fft.fft(ins[0], axis=-1).astype(C64))
+    rt.register_kernel("ifft", "cpu", lambda ins: np.fft.ifft(ins[0], axis=-1).astype(C64))
+    rt.register_kernel("zip", "cpu", lambda ins: (ins[0] * ins[1]).astype(C64))
+    for kind in ("acc", "gpu"):
+        rt.register_kernel("fft", kind, lambda ins: _jfft(ins[0]))
+        rt.register_kernel("ifft", kind, lambda ins: _jifft(ins[0]))
+        rt.register_kernel("zip", kind, lambda ins: _jzip(ins[0], ins[1]))
+
+
+def make_runtime(*, policy: str, scheduler: str = "round_robin",
+                 n_cpu: int = 1, accelerators: Sequence[str] = ("gpu0",),
+                 allocator: str = "nextfit", tracking: str = "flag"):
+    pes, ctx = make_emulated_soc(
+        n_cpu=n_cpu, accelerators=tuple(accelerators), allocator=allocator,
+        tracking=tracking,
+    )
+    rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler)
+    register_kernels(rt)
+    return rt, ctx
+
+
+def _fill(hd: HeteData, rng: np.random.Generator) -> None:
+    hd.copies[list(hd.copies)[0]][...] = (
+        rng.normal(size=hd.shape) + 1j * rng.normal(size=hd.shape)
+    ).astype(C64)
+
+
+# ---------------------------------------------------------------------------
+# reference chains (Fig 4)
+# ---------------------------------------------------------------------------
+
+
+def build_2fft(ctx: HeteContext, n: int, *, pins=(None, None), seed=0):
+    """FFT → IFFT (Fig 4a)."""
+    rng = np.random.default_rng(seed)
+    x = ctx.malloc((n,), C64)
+    mid = ctx.malloc((n,), C64)
+    out = ctx.malloc((n,), C64)
+    _fill(x, rng)
+    tasks = [
+        Task("fft", [x], [mid], pin=pins[0], name="fft0"),
+        Task("ifft", [mid], [out], pin=pins[1], name="ifft0"),
+    ]
+    return {"in": x, "mid": mid, "out": out}, tasks
+
+
+def build_2fzf(ctx: HeteContext, n: int, *, pins=(None,) * 4, seed=0):
+    """FFT, FFT → ZIP → IFFT (Fig 4b); the two FFTs run sequentially to
+    isolate memory effects (paper §5.2)."""
+    rng = np.random.default_rng(seed)
+    a, b = ctx.malloc((n,), C64), ctx.malloc((n,), C64)
+    fa, fb = ctx.malloc((n,), C64), ctx.malloc((n,), C64)
+    z, out = ctx.malloc((n,), C64), ctx.malloc((n,), C64)
+    _fill(a, rng)
+    _fill(b, rng)
+    tasks = [
+        Task("fft", [a], [fa], pin=pins[0], name="fftA"),
+        Task("fft", [b], [fb], pin=pins[1], name="fftB"),
+        Task("zip", [fa, fb], [z], pin=pins[2], name="zip"),
+        Task("ifft", [z], [out], pin=pins[3], name="ifft"),
+    ]
+    return {"a": a, "b": b, "out": out}, tasks
+
+
+def build_3zip(ctx: HeteContext, n: int, *, pins=(None,) * 3, seed=0):
+    """ZIP, ZIP → ZIP (Fig 4c)."""
+    rng = np.random.default_rng(seed)
+    bufs = [ctx.malloc((n,), C64) for _ in range(4)]
+    for hd in bufs:
+        _fill(hd, rng)
+    x, y, out = (ctx.malloc((n,), C64) for _ in range(3))
+    tasks = [
+        Task("zip", [bufs[0], bufs[1]], [x], pin=pins[0], name="zip0"),
+        Task("zip", [bufs[2], bufs[3]], [y], pin=pins[1], name="zip1"),
+        Task("zip", [x, y], [out], pin=pins[2], name="zip2"),
+    ]
+    return {"ins": bufs, "out": out}, tasks
+
+
+# ---------------------------------------------------------------------------
+# real-world applications (§4.3): RC, PD, SAR
+# ---------------------------------------------------------------------------
+
+
+def build_rc(ctx: HeteContext, *, seed=0):
+    """Radar Correlator: 2FZF data flow at 256 samples (paper §5.4)."""
+    return build_2fzf(ctx, 256, seed=seed)
+
+
+def _parallel_fzf(ctx, ways: int, n: int, *, use_fragment: bool, seed=0):
+    """``ways`` parallel (FFT, FFT→ZIP→IFFT) instances of size n —
+    the PD/SAR phase structure.  With ``use_fragment`` every data point
+    is ONE hete_malloc fragmented ``ways`` times (§3.2.3); otherwise
+    ``ways`` separate allocations per data point."""
+    rng = np.random.default_rng(seed)
+
+    def alloc_point():
+        if use_fragment:
+            parent = ctx.malloc((ways * n,), C64)
+            parent.fragment(n)
+            return parent, [parent[i] for i in range(ways)]
+        parents = [ctx.malloc((n,), C64) for _ in range(ways)]
+        return None, parents
+
+    points = {name: alloc_point() for name in
+              ("a", "b", "fa", "fb", "z", "out")}
+    for name in ("a", "b"):
+        for frag in points[name][1]:
+            _fill(frag, rng)
+    tasks = []
+    for i in range(ways):
+        a, b = points["a"][1][i], points["b"][1][i]
+        fa, fb = points["fa"][1][i], points["fb"][1][i]
+        z, out = points["z"][1][i], points["out"][1][i]
+        tasks += [
+            Task("fft", [a], [fa], name=f"fftA{i}"),
+            Task("fft", [b], [fb], name=f"fftB{i}"),
+            Task("zip", [fa, fb], [z], name=f"zip{i}"),
+            Task("ifft", [z], [out], name=f"ifft{i}"),
+        ]
+    return points, tasks
+
+
+def build_pd(ctx: HeteContext, *, ways: int = 128, n: int = 128,
+             use_fragment: bool = True, seed=0):
+    """Pulse Doppler: 128 parallel 2FZF instances at 128 samples
+    (paper §5.4 / Fig 9)."""
+    return _parallel_fzf(ctx, ways, n, use_fragment=use_fragment, seed=seed)
+
+
+def build_sar(ctx: HeteContext, *, use_fragment: bool = True, seed=0,
+              scale: int = 1):
+    """SAR: phase 1 = 512-way FZF at 256 samples; phase 2 = 256-way FZF
+    at 512 samples.  ``scale`` divides the way-counts for quick runs."""
+    p1, t1 = _parallel_fzf(ctx, 512 // scale, 256,
+                           use_fragment=use_fragment, seed=seed)
+    p2, t2 = _parallel_fzf(ctx, 256 // scale, 512,
+                           use_fragment=use_fragment, seed=seed + 1)
+    return {"phase1": p1, "phase2": p2}, t1 + t2

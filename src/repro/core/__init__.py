@@ -1,0 +1,17 @@
+"""RIMMS core: allocators, hete_Data tracking, task runtime, KV page pool."""
+
+from .allocator import AllocError, BitsetAllocator, Extent, NextFitAllocator, make_allocator
+from .hete import HeteContext, HeteData, default_context, hete_free, hete_malloc, hete_sync
+from .instrument import TransferLedger, Timer, ledger
+from .locations import HOST, BandwidthModel, Location
+from .paged_kv import PagedKVPool, gather_kv, init_pool_arrays, write_token
+from .runtime import PE, Runtime, Task, make_emulated_soc
+
+__all__ = [
+    "AllocError", "BitsetAllocator", "Extent", "NextFitAllocator", "make_allocator",
+    "HeteContext", "HeteData", "default_context", "hete_free", "hete_malloc", "hete_sync",
+    "TransferLedger", "Timer", "ledger",
+    "HOST", "BandwidthModel", "Location",
+    "PagedKVPool", "gather_kv", "init_pool_arrays", "write_token",
+    "PE", "Runtime", "Task", "make_emulated_soc",
+]

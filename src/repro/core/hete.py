@@ -1,0 +1,291 @@
+"""``hete_Data`` and the hardware-agnostic memory API (RIMMS §3.2).
+
+This is the paper's contribution, ported to JAX:
+
+* :class:`HeteData` — a logical buffer that owns one materialization per
+  :class:`~repro.core.locations.Location` ("resource pointers") and a
+  *last-resource flag* naming the location holding the valid bytes.
+* :func:`hete_malloc` / :func:`hete_free` / :func:`hete_sync` — the
+  hardware-agnostic allocation API.  ``hete_malloc`` reserves an extent in
+  the target resource arena through a marking system
+  (:mod:`repro.core.allocator`) and exposes a host-resident data field;
+  device materializations are created lazily by the runtime at task
+  dispatch.
+* :meth:`HeteData.fragment` — O(n) subdivision of one allocation into n
+  sub-buffers, each with its *own* last-resource flag, without touching
+  the arena (RIMMS §3.2.3). ``hd[i]`` indexes the i-th fragment.
+
+Consistency model (faithful to §3.2.2): a single resource owns each
+buffer per API call; the flag is updated only when a task *writes* the
+buffer; a task reading a buffer whose flag names another location pulls a
+copy directly from that location (no host bounce).  ``tracking="cached"``
+additionally remembers read-replicas (a beyond-paper optimization,
+benchmarked separately; default is the paper's flag-only behaviour).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .allocator import AllocError, Extent, make_allocator
+from .instrument import TransferLedger
+from .instrument import ledger as _global_ledger
+from .locations import HOST, Location
+
+__all__ = [
+    "HeteData",
+    "MemorySpace",
+    "HeteContext",
+    "default_context",
+    "hete_malloc",
+    "hete_free",
+    "hete_sync",
+]
+
+
+class MemorySpace:
+    """One resource memory region: placement rule + optional arena.
+
+    ``ingest``: host-format (numpy) → this location's representation.
+    ``egress``: this location's representation → host numpy.
+    For emulated accelerator PEs both are real array movements on this
+    box; for mesh locations they are ``jax.device_put`` with a sharding.
+    """
+
+    def __init__(
+        self,
+        location: Location,
+        *,
+        capacity: Optional[int] = None,
+        allocator: str = "nextfit",
+        block_size: int = 4096,
+        ingest: Optional[Callable[[np.ndarray], Any]] = None,
+        egress: Optional[Callable[[Any], np.ndarray]] = None,
+    ) -> None:
+        self.location = location
+        self.arena = (
+            make_allocator(allocator, capacity, block_size) if capacity else None
+        )
+        self._ingest = ingest
+        self._egress = egress
+
+    def ingest(self, host_value: np.ndarray) -> Any:
+        if self._ingest is None:  # host space: identity
+            return host_value
+        return self._ingest(host_value)
+
+    def egress(self, value: Any) -> np.ndarray:
+        if self._egress is None:
+            return np.asarray(value)
+        return self._egress(value)
+
+
+@dataclasses.dataclass
+class HeteData:
+    """The paper's ``hete_Data``: per-location copies + last-resource flag."""
+
+    shape: tuple
+    dtype: np.dtype
+    context: "HeteContext"
+    last_location: Location = HOST
+    # "resource pointers": location -> materialized value
+    copies: Dict[Location, Any] = dataclasses.field(default_factory=dict)
+    # arena bookkeeping: location -> Extent reserved in that space's arena
+    extents: Dict[Location, Extent] = dataclasses.field(default_factory=dict)
+    # fragmentation (§3.2.3)
+    parent: Optional["HeteData"] = None
+    frag_offset: int = 0
+    fragments: Optional[List["HeteData"]] = None
+    # beyond-paper read-replica cache; faithful mode ignores it
+    valid_at: set = dataclasses.field(default_factory=set)
+    freed: bool = False
+
+    # -- basics -----------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * np.dtype(self.dtype).itemsize
+
+    @property
+    def data(self) -> np.ndarray:
+        """Host-resident data field (transparent access, as in the paper).
+
+        NOTE: reading it without :func:`hete_sync` may observe stale bytes
+        if an accelerator holds the valid copy — exactly the hazard
+        ``hete_Sync`` exists to resolve.
+        """
+        return self.copies[HOST]
+
+    def __getitem__(self, i: int) -> "HeteData":
+        """Overloaded indexing: after ``fragment()``, ``hd[i]`` is the
+        i-th fragment (paper §3.2.3)."""
+        if self.fragments is None:
+            raise IndexError(
+                "hete_Data is not fragmented; call .fragment(nbytes) first"
+            )
+        return self.fragments[i]
+
+    def __len__(self) -> int:
+        return 0 if self.fragments is None else len(self.fragments)
+
+    # -- fragmentation (§3.2.3) --------------------------------------------
+    def fragment(self, frag_elems: int) -> List["HeteData"]:
+        """Subdivide into fragments of ``frag_elems`` leading elements.
+
+        O(n) in the number of fragments; does NOT touch the arenas (the
+        parent's reserved extents simply get logically partitioned), which
+        is the paper's point: one search, n usable buffers.
+        """
+        if self.parent is not None:
+            raise ValueError("cannot fragment a fragment")
+        total = int(self.shape[0])
+        if frag_elems <= 0 or total % frag_elems:
+            raise ValueError(
+                f"fragment size {frag_elems} must divide leading dim {total}"
+            )
+        n = total // frag_elems
+        host_buf = self.copies[HOST]
+        frags: List[HeteData] = []
+        for i in range(n):
+            sub = HeteData(
+                shape=(frag_elems,) + tuple(self.shape[1:]),
+                dtype=self.dtype,
+                context=self.context,
+                last_location=self.last_location,
+                parent=self,
+                frag_offset=i * frag_elems,
+            )
+            # zero-copy host view into the parent buffer
+            sub.copies[HOST] = host_buf[i * frag_elems : (i + 1) * frag_elems]
+            sub.valid_at = {self.last_location}
+            frags.append(sub)
+        self.fragments = frags
+        return frags
+
+
+class HeteContext:
+    """A RIMMS instance: memory-space registry + ledger + the three APIs."""
+
+    def __init__(
+        self,
+        ledger: Optional[TransferLedger] = None,
+        tracking: str = "flag",  # "flag" (paper-faithful) | "cached" (beyond-paper)
+    ) -> None:
+        if tracking not in ("flag", "cached"):
+            raise ValueError(f"unknown tracking mode {tracking!r}")
+        self.tracking = tracking
+        # Each context gets an isolated ledger by default so concurrent
+        # experiments (reference vs rimms) never share counters.
+        self.ledger = ledger if ledger is not None else TransferLedger()
+        self.spaces: Dict[Location, MemorySpace] = {HOST: MemorySpace(HOST)}
+
+    # -- registry ----------------------------------------------------------
+    def register_space(self, space: MemorySpace) -> MemorySpace:
+        self.spaces[space.location] = space
+        return space
+
+    # -- the three hardware-agnostic APIs (§3.2.1) ---------------------------
+    def malloc(
+        self,
+        shape: Union[int, Sequence[int]],
+        dtype: Any = np.uint8,
+        *,
+        spaces: Sequence[Location] = (),
+    ) -> HeteData:
+        """``hete_Malloc``: host buffer + arena reservations in ``spaces``.
+
+        The user only names a size; which resource memories get extents is
+        decided by the runtime (here: the ``spaces`` the embedding runtime
+        passes — app code never does).
+        """
+        if isinstance(shape, (int, np.integer)):
+            shape = (int(shape),)
+        shape = tuple(int(s) for s in shape)
+        hd = HeteData(shape=shape, dtype=np.dtype(dtype), context=self)
+        hd.copies[HOST] = np.zeros(shape, dtype=dtype)
+        hd.valid_at = {HOST}
+        for loc in spaces:
+            space = self.spaces[loc]
+            if space.arena is not None:
+                hd.extents[loc] = space.arena.alloc(hd.nbytes)
+        return hd
+
+    def free(self, hd: HeteData) -> None:
+        """``hete_Free``: release every resource pointer + arena extent."""
+        if hd.freed:
+            raise AllocError("double hete_free")
+        if hd.parent is not None:
+            raise ValueError("free the parent allocation, not a fragment")
+        if hd.fragments:
+            for f in hd.fragments:
+                f.copies.clear()
+                f.freed = True
+            hd.fragments = None
+        for loc, ext in hd.extents.items():
+            space = self.spaces[loc]
+            if space.arena is not None:
+                space.arena.free(ext)
+        hd.extents.clear()
+        hd.copies.clear()
+        hd.valid_at.clear()
+        hd.freed = True
+
+    def sync(self, hd: HeteData) -> np.ndarray:
+        """``hete_Sync``: make the host copy current; return it."""
+        return self.ensure(hd, HOST)
+
+    # -- runtime-internal protocol (§3.2.2) ----------------------------------
+    def ensure(self, hd: HeteData, dst: Location) -> Any:
+        """Last-resource-flag check + (only if needed) a direct copy.
+
+        This is the 1–2 cycle check the paper measures: one flag compare
+        per input. A copy is issued only when the flag names another
+        location, and it goes *directly* src→dst (Fig 1b), never via host.
+        """
+        self.ledger.record_flag_check()
+        if hd.freed:
+            raise AllocError("use after hete_free")
+        src = hd.last_location
+        if dst == src:
+            return hd.copies[dst]
+        if self.tracking == "cached" and dst in hd.valid_at and dst in hd.copies:
+            return hd.copies[dst]
+        value = hd.copies[src]
+        host_np = self.spaces[src].egress(value) if src != HOST else value
+        moved = self.spaces[dst].ingest(host_np) if dst != HOST else host_np
+        hd.copies[dst] = moved
+        hd.valid_at.add(dst)
+        self.ledger.record(src, dst, hd.nbytes)
+        return moved
+
+    def mark_written(self, hd: HeteData, loc: Location, value: Any) -> None:
+        """A task on ``loc`` produced ``value`` into ``hd`` (output flag
+        update, §3.2.2 — the *only* place the flag moves)."""
+        if hd.freed:
+            raise AllocError("use after hete_free")
+        if loc == HOST and hd.parent is not None:
+            # preserve the zero-copy view into the parent host buffer
+            np.copyto(hd.copies[HOST], np.asarray(value).reshape(hd.shape))
+        else:
+            hd.copies[loc] = value
+        hd.last_location = loc
+        hd.valid_at = {loc}
+
+
+#: default module-level context, mirroring the paper's single-runtime setup
+default_context = HeteContext()
+
+
+def hete_malloc(shape, dtype=np.uint8, *, context: Optional[HeteContext] = None,
+                spaces: Sequence[Location] = ()) -> HeteData:
+    return (context or default_context).malloc(shape, dtype, spaces=spaces)
+
+
+def hete_free(hd: HeteData, *, context: Optional[HeteContext] = None) -> None:
+    (context or hd.context or default_context).free(hd)
+
+
+def hete_sync(hd: HeteData, *, context: Optional[HeteContext] = None) -> np.ndarray:
+    return (context or hd.context or default_context).sync(hd)

@@ -1,0 +1,93 @@
+"""Transfer instrumentation — the evidence layer for the paper's claims.
+
+Every copy the runtime performs (host→PE, PE→PE, PE→host) is recorded in
+a :class:`TransferLedger`.  The paper's headline results are *eliminated
+copies* (Fig 1, Fig 5: CPU-ACC saves 1 copy, ACC-ACC saves 3) — with the
+ledger we can assert those counts exactly, and additionally integrate a
+modeled transfer time under configurable link bandwidths.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import Counter
+from typing import Iterator, Optional
+
+from .locations import DEFAULT_BANDWIDTH_MODEL, BandwidthModel, Location
+
+__all__ = ["TransferLedger", "ledger", "Timer"]
+
+
+@dataclasses.dataclass
+class TransferLedger:
+    """Counts copies and bytes per (src, dst) pair + modeled seconds."""
+
+    bandwidth_model: BandwidthModel = dataclasses.field(
+        default_factory=lambda: DEFAULT_BANDWIDTH_MODEL
+    )
+    copies: Counter = dataclasses.field(default_factory=Counter)
+    bytes_moved: Counter = dataclasses.field(default_factory=Counter)
+    modeled_seconds: float = 0.0
+    flag_checks: int = 0  # last-resource-flag checks (§5.2.2 microbench)
+
+    def record(self, src: Location, dst: Location, nbytes: int) -> None:
+        key = (str(src), str(dst))
+        self.copies[key] += 1
+        self.bytes_moved[key] += nbytes
+        self.modeled_seconds += self.bandwidth_model.seconds(src, dst, nbytes)
+
+    def record_flag_check(self, n: int = 1) -> None:
+        self.flag_checks += n
+
+    # -- aggregates -------------------------------------------------------
+    @property
+    def total_copies(self) -> int:
+        return sum(self.copies.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_moved.values())
+
+    def reset(self) -> None:
+        self.copies.clear()
+        self.bytes_moved.clear()
+        self.modeled_seconds = 0.0
+        self.flag_checks = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "total_copies": self.total_copies,
+            "total_bytes": self.total_bytes,
+            "modeled_seconds": self.modeled_seconds,
+            "flag_checks": self.flag_checks,
+            "by_pair": {f"{s}->{d}": c for (s, d), c in sorted(self.copies.items())},
+        }
+
+
+#: process-global ledger; runtimes may use their own instance instead.
+ledger = TransferLedger()
+
+
+@contextlib.contextmanager
+def fresh_ledger(l: Optional[TransferLedger] = None) -> Iterator[TransferLedger]:
+    """Context manager: reset (or swap in) a ledger for one experiment."""
+    target = l if l is not None else ledger
+    saved = target.snapshot()
+    target.reset()
+    try:
+        yield target
+    finally:
+        del saved  # snapshots are for callers; we do not restore
+
+
+class Timer:
+    """Monotonic wall-clock timer for benchmark harnesses."""
+
+    def __enter__(self) -> "Timer":
+        self.start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.seconds = time.perf_counter() - self.start

@@ -1,0 +1,165 @@
+"""Paged KV-cache pool — the production arena instance of RIMMS on TPU.
+
+This is the load-bearing mapping of the paper's allocator + ``fragment``
+machinery onto an LM serving system (DESIGN.md §2, row "hete_Malloc
+arena"):
+
+* The device holds one dense KV *page pool* per layer (analogous to the
+  ZCU102's physically-contiguous 64 MiB UDMA buffer: jittable code needs
+  static shapes, so all KV lives in one preallocated region).
+* A host-side **marking system** (bitset or next-fit from
+  :mod:`repro.core.allocator`, block = one page) hands out page extents.
+* A sequence's KV buffer is *one* extent search fragmented into pages
+  (§3.2.3): one ``alloc`` + O(n) fragment instead of n allocs.  When the
+  pool is too fragmented for a contiguous run, we degrade to per-page
+  allocation (next-fit's rolling cursor makes that amortized O(1)).
+* Block tables (page id per logical page of each sequence) are the
+  "resource pointers"; they are device inputs to the paged-attention
+  kernel.
+
+The pool *arrays* are functional jax values threaded through the serving
+step; this class owns only host metadata — exactly the paper's split
+(marking metadata on host, payload in resource memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .allocator import AllocError, Extent, make_allocator
+
+__all__ = ["PagedKVPool", "init_pool_arrays", "write_token", "gather_kv"]
+
+
+@dataclasses.dataclass
+class _SeqInfo:
+    extents: List[Extent]
+    page_ids: List[int]
+    n_tokens: int = 0
+
+
+class PagedKVPool:
+    """Host-side page bookkeeping for a device KV pool."""
+
+    def __init__(
+        self,
+        *,
+        num_pages: int,
+        page_size: int,
+        allocator: str = "bitset",
+    ) -> None:
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # Arena in units of pages: block_size=1 page.
+        self.arena = make_allocator(allocator, capacity=num_pages, block_size=1)
+        self._seqs: Dict[int, _SeqInfo] = {}
+        self.fragment_allocs = 0  # single-search contiguous grabs
+        self.fallback_allocs = 0  # per-page fallbacks under fragmentation
+
+    # -- allocation ---------------------------------------------------------
+    def alloc_sequence(self, seq_id: int, n_tokens: int) -> np.ndarray:
+        """Reserve pages for ``n_tokens`` tokens; returns int32 page ids."""
+        if seq_id in self._seqs:
+            raise KeyError(f"sequence {seq_id} already allocated")
+        n_pages = max(1, -(-n_tokens // self.page_size))
+        extents, page_ids = self._grab(n_pages)
+        self._seqs[seq_id] = _SeqInfo(extents, page_ids, n_tokens)
+        return np.asarray(page_ids, dtype=np.int32)
+
+    def extend_sequence(self, seq_id: int, n_new_tokens: int) -> np.ndarray:
+        """Grow a sequence (decode appends); returns the full page table."""
+        info = self._seqs[seq_id]
+        need = -(-(info.n_tokens + n_new_tokens) // self.page_size)
+        if need > len(info.page_ids):
+            extents, page_ids = self._grab(need - len(info.page_ids))
+            info.extents.extend(extents)
+            info.page_ids.extend(page_ids)
+        info.n_tokens += n_new_tokens
+        return np.asarray(info.page_ids, dtype=np.int32)
+
+    def _grab(self, n_pages: int) -> Tuple[List[Extent], List[int]]:
+        # Fast path: one extent, fragmented into pages (the paper's
+        # fragment(): one search for n buffers).
+        try:
+            ext = self.arena.alloc(n_pages)
+            self.fragment_allocs += 1
+            return [ext], list(range(ext.offset, ext.offset + n_pages))
+        except AllocError:
+            pass
+        # Fragmented pool: fall back to page-at-a-time.
+        extents: List[Extent] = []
+        try:
+            for _ in range(n_pages):
+                extents.append(self.arena.alloc(1))
+        except AllocError:
+            for e in extents:
+                self.arena.free(e)
+            raise AllocError(
+                f"KV pool exhausted: need {n_pages} pages, "
+                f"{self.free_pages} free"
+            )
+        self.fallback_allocs += 1
+        return extents, [e.offset for e in extents]
+
+    def free_sequence(self, seq_id: int) -> None:
+        info = self._seqs.pop(seq_id)
+        for ext in info.extents:
+            self.arena.free(ext)
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return self.arena.free_bytes  # capacity is in page units
+
+    def n_tokens(self, seq_id: int) -> int:
+        return self._seqs[seq_id].n_tokens
+
+    def page_table(self, seq_id: int, pad_to: Optional[int] = None) -> np.ndarray:
+        ids = list(self._seqs[seq_id].page_ids)
+        if pad_to is not None:
+            ids = ids + [0] * (pad_to - len(ids))
+        return np.asarray(ids, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Functional device-side helpers (pure jnp; used by serve engine + kernel ref)
+# ---------------------------------------------------------------------------
+
+
+def init_pool_arrays(num_pages, page_size, kv_heads, head_dim, dtype):
+    """(k_pool, v_pool) with shape (num_pages, page_size, kv_heads, head_dim)."""
+    import jax.numpy as jnp
+
+    shape = (num_pages, page_size, kv_heads, head_dim)
+    return jnp.zeros(shape, dtype=dtype), jnp.zeros(shape, dtype=dtype)
+
+
+def write_token(pool, block_table, pos, new):
+    """Scatter one token per sequence into the pool.
+
+    pool:        (num_pages, page_size, kv_heads, head_dim)
+    block_table: (batch, max_pages) int32 — page id per logical page
+    pos:         (batch,) int32 — token position being written
+    new:         (batch, kv_heads, head_dim)
+    """
+    import jax.numpy as jnp
+
+    page_size = pool.shape[1]
+    logical_page = pos // page_size
+    slot = pos % page_size
+    batch_idx = jnp.arange(block_table.shape[0])
+    page_id = block_table[batch_idx, logical_page]
+    return pool.at[page_id, slot].set(new.astype(pool.dtype))
+
+
+def gather_kv(pool, block_table, max_len):
+    """Gather a dense (batch, max_len, kv_heads, head_dim) view of the pool
+    (reference path / tests; the Pallas kernel reads pages in place)."""
+    page_size = pool.shape[1]
+    n_pages = max_len // page_size
+    pages = pool[block_table[:, :n_pages]]  # (B, n_pages, page, H, D)
+    b = pages.shape[0]
+    return pages.reshape(b, n_pages * page_size, *pool.shape[2:])

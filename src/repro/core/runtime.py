@@ -1,0 +1,226 @@
+"""Task runtime — the CEDR analogue RIMMS integrates with (§2, §3.2.2).
+
+A small dynamic task runtime: applications submit *API calls* (tasks) over
+:class:`~repro.core.hete.HeteData` buffers; a scheduler maps each task to a
+processing element (PE) at dispatch time (round-robin, pinned, or
+data-affinity); the memory policy decides what data movement happens.
+
+Two memory policies, both first-class so every experiment reports the pair:
+
+* ``"reference"`` — the paper's baseline (host-owned data): every input is
+  copied host→PE before execution and every output PE→host after, so the
+  host always holds the valid copy (Fig 1a).
+* ``"rimms"``     — the paper's contribution: per-input last-resource-flag
+  check, direct src→PE copy only when the flag names another location,
+  output flag update to the executing PE (Fig 1b).
+
+PEs are emulated on this CPU-only box: a "cpu" PE executes numpy
+callables against host memory; accelerator PEs ("fft_acc", "zip_acc",
+"gpu") execute jitted JAX callables against their own
+:class:`~repro.core.hete.MemorySpace`. Transfers between spaces are real
+array movements and are recorded in the ledger (count, bytes, modeled
+seconds under platform bandwidths).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .hete import HeteContext, HeteData, MemorySpace
+from .locations import HOST, Location
+
+__all__ = ["PE", "Task", "Runtime", "make_emulated_soc"]
+
+
+@dataclasses.dataclass
+class PE:
+    """A processing element: name, kind, its memory location, supported ops."""
+
+    name: str
+    kind: str  # "cpu" | "acc" | "gpu" | ...
+    location: Location
+    supports: frozenset
+
+    def __post_init__(self) -> None:
+        self.supports = frozenset(self.supports)
+
+
+@dataclasses.dataclass
+class Task:
+    """One API call: op over HeteData inputs/outputs (+ scalar params)."""
+
+    op: str
+    inputs: List[HeteData]
+    outputs: List[HeteData]
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    pin: Optional[str] = None  # pin to a PE name (CPU-ACC style scenarios)
+    name: str = ""
+
+
+class Runtime:
+    """Dispatch loop: schedule → move (policy) → execute → flag update."""
+
+    def __init__(
+        self,
+        pes: Sequence[PE],
+        context: HeteContext,
+        *,
+        policy: str = "rimms",
+        scheduler: str = "round_robin",
+    ) -> None:
+        if policy not in ("rimms", "reference"):
+            raise ValueError(f"unknown memory policy {policy!r}")
+        if scheduler not in ("round_robin", "data_affinity"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        self.pes = list(pes)
+        self.by_name = {pe.name: pe for pe in self.pes}
+        self.context = context
+        self.policy = policy
+        self.scheduler = scheduler
+        self._rr_state: Dict[str, int] = {}
+        # kernels: (op, pe_kind) -> callable(list_of_arrays, **params) -> tuple
+        self._kernels: Dict[tuple, Callable] = {}
+        self.task_log: List[tuple] = []  # (task name/op, pe name) for tests
+
+    # -- registration -------------------------------------------------------
+    def register_kernel(self, op: str, pe_kind: str, fn: Callable) -> None:
+        self._kernels[(op, pe_kind)] = fn
+
+    # -- scheduling -----------------------------------------------------------
+    def _eligible(self, task: Task) -> List[PE]:
+        pes = [
+            pe
+            for pe in self.pes
+            if task.op in pe.supports and (task.op, pe.kind) in self._kernels
+        ]
+        if not pes:
+            raise LookupError(f"no PE supports op {task.op!r}")
+        return pes
+
+    def _schedule(self, task: Task) -> PE:
+        if task.pin is not None:
+            return self.by_name[task.pin]
+        pes = self._eligible(task)
+        if self.scheduler == "round_robin":
+            i = self._rr_state.get(task.op, 0)
+            self._rr_state[task.op] = (i + 1) % len(pes)
+            return pes[i % len(pes)]
+        # data_affinity (beyond-paper): most input bytes already valid at PE
+        def score(pe: PE) -> int:
+            return sum(
+                hd.nbytes for hd in task.inputs if hd.last_location == pe.location
+            )
+        return max(pes, key=score)
+
+    # -- execution --------------------------------------------------------------
+    def run(self, tasks: Sequence[Task]) -> float:
+        """Execute tasks in submission order (data deps are submission-
+        ordered by the apps, matching CEDR's API-level serialization).
+        Returns wall seconds."""
+        t0 = time.perf_counter()
+        for task in tasks:
+            self._dispatch(task)
+        return time.perf_counter() - t0
+
+    def _dispatch(self, task: Task) -> None:
+        pe = self._schedule(task)
+        fn = self._kernels[(task.op, pe.kind)]
+        ctx = self.context
+        loc = pe.location
+
+        if self.policy == "reference":
+            # Host-owned: host must be current first (producer wrote to
+            # host already under this policy), then copy host→PE.
+            ins = []
+            for hd in task.inputs:
+                host_val = hd.copies[HOST]
+                if loc != HOST:
+                    moved = ctx.spaces[loc].ingest(host_val)
+                    ctx.ledger.record(HOST, loc, hd.nbytes)
+                    ins.append(moved)
+                else:
+                    ins.append(host_val)
+            outs = _as_tuple(fn(ins, **task.params))
+            for hd, val in zip(task.outputs, outs):
+                if loc != HOST:
+                    host_val = ctx.spaces[loc].egress(val)
+                    ctx.ledger.record(loc, HOST, hd.nbytes)
+                else:
+                    host_val = np.asarray(val)
+                ctx.mark_written(hd, HOST, host_val.reshape(hd.shape))
+        else:  # rimms
+            ins = [ctx.ensure(hd, loc) for hd in task.inputs]
+            outs = _as_tuple(fn(ins, **task.params))
+            for hd, val in zip(task.outputs, outs):
+                ctx.mark_written(hd, loc, val)
+
+        self.task_log.append((task.name or task.op, pe.name))
+
+
+def _as_tuple(x: Any) -> tuple:
+    return x if isinstance(x, tuple) else (x,)
+
+
+# ---------------------------------------------------------------------------
+# Emulated heterogeneous SoC (§4.1 analogue) — built on the single CPU
+# device: accelerator memory spaces hold jax.Arrays, host space numpy.
+# ---------------------------------------------------------------------------
+
+
+def make_emulated_soc(
+    *,
+    n_cpu: int = 1,
+    accelerators: Sequence[str] = ("fft_acc0", "zip_acc0"),
+    acc_ops: Optional[Dict[str, Sequence[str]]] = None,
+    arena_bytes: int = 64 << 20,  # 64 MiB UDMA buffer, as on the ZCU102
+    allocator: str = "nextfit",
+    block_size: int = 4096,
+    context: Optional[HeteContext] = None,
+    tracking: str = "flag",
+) -> tuple:
+    """Build (runtime-ready PEs, HeteContext) for an emulated SoC.
+
+    ``acc_ops`` maps accelerator name → ops it supports; defaults derive
+    from the name prefix ("fft_acc*" → fft/ifft, "zip_acc*" → zip,
+    "gpu*" → everything).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    ctx = context or HeteContext(tracking=tracking)
+    device = jax.devices()[0]
+
+    def _ingest(host_value: np.ndarray):
+        return jax.device_put(host_value, device)
+
+    def _egress(value) -> np.ndarray:
+        return np.asarray(value)
+
+    pes: List[PE] = []
+    for i in range(n_cpu):
+        pes.append(
+            PE(f"cpu{i}", "cpu", HOST, frozenset({"fft", "ifft", "zip", "generic"}))
+        )
+
+    default_ops = {"fft_acc": ("fft", "ifft"), "zip_acc": ("zip",),
+                   "gpu": ("fft", "ifft", "zip", "generic")}
+    for name in accelerators:
+        kind = next((k for k in default_ops if name.startswith(k)), "acc")
+        ops = tuple((acc_ops or {}).get(name, default_ops.get(kind, ())))
+        loc = Location("device", name)
+        ctx.register_space(
+            MemorySpace(
+                loc,
+                capacity=arena_bytes,
+                allocator=allocator,
+                block_size=block_size,
+                ingest=_ingest,
+                egress=_egress,
+            )
+        )
+        pes.append(PE(name, "gpu" if kind == "gpu" else "acc", loc, frozenset(ops)))
+    return pes, ctx

@@ -1,0 +1,19 @@
+from .sharding import (
+    MULTI_POD_RULES,
+    SINGLE_POD_RULES,
+    AxisRules,
+    current_rules,
+    resolve_spec,
+    resolve_spec_tree,
+    set_rules,
+    shard,
+    shard_if_divisible,
+    spec,
+    use_rules,
+)
+
+__all__ = [
+    "MULTI_POD_RULES", "SINGLE_POD_RULES", "AxisRules", "current_rules",
+    "resolve_spec", "resolve_spec_tree", "set_rules", "shard",
+    "shard_if_divisible", "spec", "use_rules",
+]

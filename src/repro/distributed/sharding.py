@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules (GSPMD named-axis indirection).
+
+Models annotate tensors with *logical* axis names ("batch", "heads",
+"ff", "fsdp", ...); the launcher installs an :class:`AxisRules` mapping
+logical names → mesh axis names for the active mesh (2-axis single-pod or
+3-axis multi-pod).  This keeps every model definition mesh-agnostic: the
+same code lowers on ``("data","model")`` and ``("pod","data","model")``.
+
+Divisibility guard: a logical dim that does not divide the mapped mesh
+axes is *replicated* instead (e.g. 10 attention heads on a 16-wide model
+axis; 40 experts on 16) — XLA would otherwise pad, silently wasting up to
+axis-size/dim of compute.  Each drop is recorded so the roofline report
+can surface it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Iterator, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "AxisRules",
+    "set_rules",
+    "current_rules",
+    "spec",
+    "shard",
+    "shard_if_divisible",
+    "SINGLE_POD_RULES",
+    "MULTI_POD_RULES",
+]
+
+#: default logical→mesh map for the 16×16 single-pod mesh
+SINGLE_POD_RULES: Dict[str, Union[str, Tuple[str, ...], None]] = {
+    "batch": ("data",),
+    "fsdp": ("data",),        # parameter / optimizer-state sharding axis
+    "seq": None,               # qkv seq dim (halo-free ops only)
+    "res_seq": None,           # residual-stream seq dim — ("model",) = Megatron-style SP
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "dmodel": None,            # activations replicated across model between ops
+    "pages": None,
+    "model": ("model",),       # direct tensor-parallel axis reference
+    "data": ("data",),
+}
+
+#: pjit boundary shardings must divide evenly, so non-divisible dims are
+#: always replicated; memory-critical KV caches with non-divisible head
+#: counts switch to sequence-sharded layouts instead (blocks.kv_specs).
+UNEVEN_OK: set = set()
+
+#: 2×16×16 multi-pod: pod is an outer DP axis; parameters/optimizer
+#: state FSDP over the full DP extent ("pod","data") — ZeRO across all
+#: replicas, required to fit e.g. qwen3-235B's fp32 Adam state
+#: (§Perf iteration 4).
+MULTI_POD_RULES: Dict[str, Union[str, Tuple[str, ...], None]] = {
+    **SINGLE_POD_RULES,
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "pod": ("pod",),
+}
+
+
+@dataclasses.dataclass
+class AxisRules:
+    rules: Dict[str, Union[str, Tuple[str, ...], None]]
+    mesh: Optional[Mesh] = None
+    #: (logical, dim, axes) triples dropped for non-divisibility
+    dropped: list = dataclasses.field(default_factory=list)
+
+    def axes_for(self, logical: Optional[str]) -> Optional[Tuple[str, ...]]:
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        ax = self.rules[logical]
+        if ax is None:
+            return None
+        return (ax,) if isinstance(ax, str) else tuple(ax)
+
+    def mesh_size(self, axes: Sequence[str]) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def entry(self, logical: Optional[str], dim: Optional[int]) -> Union[None, str, Tuple[str, ...]]:
+        """Resolve one PartitionSpec entry, with the divisibility guard:
+        non-divisible dims are replicated, except ``UNEVEN_OK`` logicals
+        with dim ≥ axis size, which shard unevenly (XLA pads)."""
+        axes = self.axes_for(logical)
+        if not axes:
+            return None
+        if dim is not None and self.mesh is not None:
+            size = self.mesh_size(axes)
+            if size > 1 and dim % size != 0:
+                self.dropped.append((logical, dim, axes))
+                return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, *logical: Optional[str], dims: Optional[Sequence[Optional[int]]] = None) -> P:
+        dims = dims if dims is not None else [None] * len(logical)
+        return P(*[self.entry(l, d) for l, d in zip(logical, dims)])
+
+
+_state = threading.local()
+
+
+def set_rules(rules: AxisRules) -> None:
+    _state.rules = rules
+
+
+def current_rules() -> AxisRules:
+    r = getattr(_state, "rules", None)
+    if r is None:
+        r = AxisRules(dict(SINGLE_POD_RULES), mesh=None)
+        _state.rules = r
+    return r
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules) -> Iterator[AxisRules]:
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def spec(*logical: Optional[str], dims: Optional[Sequence[Optional[int]]] = None) -> P:
+    return current_rules().spec(*logical, dims=dims)
+
+
+def shard(x, *logical: Optional[str]):
+    """with_sharding_constraint under the active rules; no-op without mesh."""
+    rules = current_rules()
+    if rules.mesh is None or rules.mesh.empty:
+        return x
+    s = rules.spec(*logical, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, s))
+
+
+def shard_if_divisible(dim: int, logical: str) -> Union[None, str, Tuple[str, ...]]:
+    return current_rules().entry(logical, dim)
+
+
+def resolve_spec(p: P, rules: AxisRules, dims: Optional[Sequence[int]] = None) -> P:
+    """Translate a logical PartitionSpec (entries are logical axis names)
+    into a mesh PartitionSpec under ``rules``."""
+    entries = []
+    for i, e in enumerate(p):
+        dim = dims[i] if dims is not None and i < len(dims) else None
+        if e is None:
+            entries.append(None)
+            continue
+        names = (e,) if isinstance(e, str) else tuple(e)
+        axes: list = []
+        for nm in names:
+            a = rules.entry(nm, dim)
+            if a is None:
+                continue
+            axes.extend((a,) if isinstance(a, str) else a)
+        entries.append(None if not axes else (axes[0] if len(axes) == 1 else tuple(axes)))
+    return P(*entries)
+
+
+def resolve_spec_tree(tree, rules: AxisRules, shapes=None):
+    """Map a pytree of logical PartitionSpecs (+ optional matching pytree
+    of abstract values for dim-aware guards) to mesh NamedShardings."""
+    is_p = lambda x: isinstance(x, P)
+    if shapes is None:
+        return jax.tree.map(
+            lambda p: NamedSharding(rules.mesh, resolve_spec(p, rules)),
+            tree, is_leaf=is_p,
+        )
+    return jax.tree.map(
+        lambda p, s: NamedSharding(rules.mesh, resolve_spec(p, rules, s.shape)),
+        tree, shapes, is_leaf=is_p,
+    )

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel subpackage ships:
+  <name>.py — the pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper (padding, reshapes, vmap)
+  ref.py    — the pure-jnp oracle used by the allclose test sweeps
+
+``INTERPRET`` is True off-TPU: kernels execute their bodies in Python
+via the Pallas interpreter for correctness validation (this container is
+CPU-only; TPU v5e is the deployment target).
+"""
+
+import jax
+
+INTERPRET = jax.default_backend() != "tpu"

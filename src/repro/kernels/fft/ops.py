@@ -1,0 +1,27 @@
+"""Public FFT op: complex64 batches, forward/inverse."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .fft import BLOCK_ROWS, fft_planes
+
+
+def fft(x: jnp.ndarray, forward: bool = True) -> jnp.ndarray:
+    """FFT along the last axis via the Pallas kernel.
+    IFFT uses the conjugation identity ifft(x) = conj(fft(conj(x)))/N."""
+    shape = x.shape
+    n = shape[-1]
+    rows = int(jnp.prod(jnp.asarray(shape[:-1]))) if len(shape) > 1 else 1
+    xf = x.reshape(rows, n)
+    if not forward:
+        xf = jnp.conj(xf)
+    pad = (-rows) % BLOCK_ROWS
+    xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    orr, oi = fft_planes(
+        jnp.real(xf).astype(jnp.float32), jnp.imag(xf).astype(jnp.float32)
+    )
+    out = (orr + 1j * oi).astype(jnp.complex64)[:rows]
+    if not forward:
+        out = jnp.conj(out) / n
+    return out.reshape(shape)

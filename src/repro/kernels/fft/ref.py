@@ -1,0 +1,7 @@
+"""Oracle: batched FFT/IFFT via jnp.fft."""
+
+import jax.numpy as jnp
+
+
+def fft(x: jnp.ndarray, forward: bool = True) -> jnp.ndarray:
+    return jnp.fft.fft(x, axis=-1) if forward else jnp.fft.ifft(x, axis=-1)

@@ -1,0 +1,24 @@
+"""Public flash-attention op: (B,S,H,d) GQA layout → kernel layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bh
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256):
+    """q: (B,S,Hq,d); k,v: (B,S,Hkv,d) with Hq % Hkv == 0.
+    Returns (B,S,Hq,d)."""
+    B, S, Hq, d = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * Hq, S, d)
+    o = flash_attention_bh(to_bh(q), to_bh(k), to_bh(v), causal=causal,
+                           block_q=block_q, block_k=block_k)
+    return o.reshape(B, Hq, S, d).transpose(0, 2, 1, 3)

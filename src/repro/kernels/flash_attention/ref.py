@@ -1,0 +1,18 @@
+"""Oracle: dense causal attention in fp32."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, causal: bool = True):
+    """q,k,v: (BH, S, d)."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

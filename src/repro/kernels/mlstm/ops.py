@@ -1,0 +1,28 @@
+"""Public mLSTM op: (B, S, H, m) layout → kernel layout."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .mlstm import mlstm_chunkwise_bh
+
+
+def mlstm_chunkwise(q, k, v, i_gate, log_f, *, chunk: int = 64):
+    """q,k,v: (B,S,H,m) (q unscaled); i_gate/log_f: (B,S,H) fp32.
+    Returns (B,S,H,m)."""
+    B, S, H, m = q.shape
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, m)
+
+    def g_bh(x):
+        return x.transpose(0, 2, 1).reshape(B * H, S)
+
+    h = mlstm_chunkwise_bh(
+        to_bh(q / math.sqrt(m)), to_bh(k), to_bh(v),
+        g_bh(i_gate.astype(jnp.float32)), g_bh(log_f.astype(jnp.float32)),
+        chunk=chunk,
+    )
+    return h.reshape(B, H, S, m).transpose(0, 2, 1, 3)

@@ -1,0 +1,24 @@
+"""Oracle: sequential (per-token) mLSTM recurrence in fp32."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mlstm_sequential(q, k, v, i_gate, log_f):
+    """q,k,v: (BH, S, m) with q pre-scaled; gates (BH, S).
+    h_t = (q_t C_t) / max(|q_t·n_t|, 1);
+    C_t = f_t C_{t-1} + i_t k_t v_tᵀ;  n_t = f_t n_{t-1} + i_t k_t."""
+    q, k, v = (np.asarray(t, np.float64) for t in (q, k, v))
+    ii = np.asarray(i_gate, np.float64)
+    f = np.exp(np.asarray(log_f, np.float64))
+    BH, S, m = q.shape
+    h = np.zeros((BH, S, m))
+    for b in range(BH):
+        C = np.zeros((m, m))
+        n = np.zeros((m,))
+        for t in range(S):
+            C = f[b, t] * C + ii[b, t] * np.outer(k[b, t], v[b, t])
+            n = f[b, t] * n + ii[b, t] * k[b, t]
+            den = max(abs(q[b, t] @ n), 1.0)
+            h[b, t] = (q[b, t] @ C) / den
+    return jnp.asarray(h, jnp.float32)

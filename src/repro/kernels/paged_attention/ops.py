@@ -1,0 +1,4 @@
+"""Public paged-attention op (thin: the kernel signature is already the
+serving-engine-facing one)."""
+
+from .paged_attention import paged_attention  # noqa: F401

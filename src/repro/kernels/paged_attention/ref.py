@@ -1,0 +1,25 @@
+"""Oracle: paged decode attention via dense gather (pure jnp)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths):
+    """Same signature as the kernel; gathers pages densely."""
+    B, hq, d = q.shape
+    P, page, n_kv, _ = k_pages.shape
+    group = hq // n_kv
+    n_pages = block_table.shape[1]
+    k = k_pages[block_table].reshape(B, n_pages * page, n_kv, d)
+    v = v_pages[block_table].reshape(B, n_pages * page, n_kv, d)
+    qg = q.reshape(B, n_kv, group, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    t = jnp.arange(n_pages * page)
+    mask = t[None] < lengths[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, hq, d).astype(q.dtype)

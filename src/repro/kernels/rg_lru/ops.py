@@ -1,0 +1,19 @@
+"""Public RG-LRU op: pads D to lane multiples."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .rg_lru import LANES, rg_lru_scan as _kernel
+
+
+def rg_lru_scan(a, b, h0):
+    B, S, D = a.shape
+    pad = (-D) % LANES
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad)))
+    hs, hN = _kernel(a.astype(jnp.float32), b.astype(jnp.float32),
+                     h0.astype(jnp.float32))
+    return hs[..., :D], hN[..., :D]

@@ -1,0 +1,19 @@
+"""Oracle: RG-LRU linear recurrence via associative_scan."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_scan(a, b, h0):
+    """a, b: (B,S,D); h0: (B,D) → (h_seq, h_final)."""
+    # fold h0 into the first step: h_1 = a_1 h0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    hs = hs.swapaxes(0, 1)
+    return hs, hs[:, -1]

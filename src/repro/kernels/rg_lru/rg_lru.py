@@ -1,0 +1,56 @@
+"""RG-LRU linear-recurrence kernel (RecurrentGemma prefill hot spot).
+
+h_t = a_t · h_{t-1} + b_t, elementwise over (B, S, D).
+
+XLA's ``associative_scan`` materializes O(log S) intermediate passes over
+HBM; this kernel reads a,b once and writes h once — one VMEM-resident
+(1, S, 128) lane tile per grid step, sequential fori_loop over time
+inside VMEM (the op is memory-bound; arithmetic is negligible).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import INTERPRET
+
+LANES = 128
+
+
+def _rg_lru_kernel(a_ref, b_ref, h0_ref, o_ref, hN_ref):
+    S = a_ref.shape[1]
+    a = a_ref[0]  # (S, LANES)
+    b = b_ref[0]
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, S, body, h0_ref[0])
+    hN_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rg_lru_scan(a, b, h0, *, interpret: bool = INTERPRET):
+    """a, b: (B, S, D) f32; h0: (B, D) initial state.
+    Returns (h_seq (B,S,D), h_final (B,D))."""
+    B, S, D = a.shape
+    grid = (B, D // LANES)
+    seq_spec = pl.BlockSpec((1, S, LANES), lambda i, j: (i, 0, j))
+    vec_spec = pl.BlockSpec((1, LANES), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _rg_lru_kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, vec_spec],
+        out_specs=[seq_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,24 @@
+"""Public ZIP op: complex64 in/out, pads + reshapes to kernel tiles."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .zip import LANES, zip_mul_planes
+
+
+def zip_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Pointwise complex multiply via the Pallas ZIP kernel."""
+    shape = a.shape
+    n = a.size
+    pad = (-n) % LANES
+    def planes(x):
+        f = jnp.concatenate([x.reshape(-1), jnp.zeros((pad,), x.dtype)])
+        f = f.reshape(-1, LANES)
+        return jnp.real(f).astype(jnp.float32), jnp.imag(f).astype(jnp.float32)
+    ar, ai = planes(a)
+    br, bi = planes(b)
+    orr, oi = zip_mul_planes(ar, ai, br, bi)
+    out = (orr + 1j * oi).astype(jnp.complex64).reshape(-1)[:n]
+    return out.reshape(shape)

@@ -1,0 +1,8 @@
+"""Oracle: pointwise complex multiply."""
+
+import jax.numpy as jnp
+
+
+def zip_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a, b: complex64 arrays of identical shape."""
+    return a * b

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with zero device allocation:
+  * proof of shardability: ``jax.jit(step).lower(**specs).compile()``
+    on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh,
+  * ``compiled.memory_analysis()``  → bytes per device (fits-HBM check),
+  * ``compiled.cost_analysis()``    → per-device HLO FLOPs / bytes,
+  * a collective-traffic report parsed from the post-SPMD HLO text.
+
+Roofline probes (``--probe 1|2``) recompile the model with 1 or 2 layer
+groups, fully unrolled (scan bodies are counted once by XLA cost
+analysis — DESIGN.md): the roofline tool extrapolates
+``cost = c1 + (G_eff - 1) · (c2 - c1)``.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --sweep [--probes] [--skip-existing]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, cells_for, get_config
+from repro.distributed.sharding import resolve_spec, resolve_spec_tree, use_rules
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.mesh import make_production_mesh, rules_for_mesh
+from repro.launch.specs import input_shardings, input_specs
+from repro.models.model_api import build_model, stack_plan
+from repro.train.step import build_prefill_step, build_serve_step, build_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+#: gradient-accumulation factor per arch for train cells (activation
+#: memory control; probes always use 1 — same per-step cost totals).
+MICROBATCHES = {"command_r_plus_104b": 16, "internvl2_26b": 8}
+DEFAULT_MICROBATCHES = 8
+
+#: per-arch sharding-rule overrides (§Perf iteration 3): Megatron-style
+#: sequence parallelism on the residual stream for the largest dense
+#: archs — layer-scan carries shrink by the TP width (command-r train
+#: 26.5 → 11.3 GiB/dev) at the cost of per-layer seq all-gathers.
+RULES_OVERRIDES = {
+    "command_r_plus_104b": {"res_seq": ("model",)},
+    "internvl2_26b": {"res_seq": ("model",)},
+    "qwen3_moe_235b_a22b": {"res_seq": ("model",)},
+}
+
+
+def _probe_cfg(cfg, probe_groups: int):
+    plan = stack_plan(cfg)
+    k = len(plan[0][0])
+    return dataclasses.replace(
+        cfg,
+        name=f"{cfg.name}-p{probe_groups}",
+        n_layers=k * probe_groups,
+        n_enc_layers=probe_groups if cfg.n_enc_layers else 0,
+    )
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               probe_groups: int = 0, remat: bool = True,
+               rules_overrides=None, save_hlo: bool = False) -> dict:
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    probe = probe_groups > 0
+    eff_groups = sum(G for _, G in stack_plan(cfg))  # extrapolation count
+    if probe:
+        cfg = _probe_cfg(cfg, probe_groups)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_mesh(mesh, overrides=rules_overrides)
+    n_dev = mesh.devices.size
+
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_dev, "probe": probe_groups,
+        "eff_groups": eff_groups,
+    }
+    t0 = time.time()
+    with use_rules(rules):
+        model = build_model(cfg)
+        specs = input_specs(cfg, shape)
+        shardings = input_shardings(cfg, shape, rules)
+        rep = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            k_micro = 1 if probe else MICROBATCHES.get(
+                arch_id, DEFAULT_MICROBATCHES
+            )
+            # cap: per-microbatch batch must stay shardable over the
+            # full DP extent (pod×data), else activations replicate
+            batch_shards = rules.mesh_size(rules.axes_for("batch"))
+            k_micro = max(1, min(k_micro, shape.global_batch // batch_shards))
+            step = build_train_step(model, remat=remat, probe=probe,
+                                    microbatches=k_micro)
+            rec["microbatches"] = k_micro
+            donate = (0, 1)
+            metrics_sh = {"grad_norm": rep, "lr": rep, "loss": rep}
+            out_sh = (shardings[0], shardings[1], metrics_sh)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(model, shape.seq_len, probe=probe)
+            donate = ()
+            caches = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            c_sh = resolve_spec_tree(model.cache_specs(), rules, caches)
+            logits_sh = NamedSharding(
+                mesh, resolve_spec(P("batch", "vocab"), rules,
+                                   (shape.global_batch, cfg.vocab))
+            )
+            out_sh = (logits_sh, c_sh)
+        else:  # decode
+            step = build_serve_step(model)
+            donate = (1,)
+            tok_sh = NamedSharding(
+                mesh, resolve_spec(P("batch"), rules, (shape.global_batch,))
+            )
+            out_sh = (tok_sh, shardings[1])
+
+        with mesh:
+            jitted = jax.jit(step, in_shardings=shardings,
+                             out_shardings=out_sh, donate_argnums=donate)
+            lowered = jitted.lower(*specs)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        k: int(getattr(ma, k, 0) or 0)
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes")
+    }
+    # live bytes per device ≈ args + temps (outputs alias donated args)
+    rec["memory"]["per_device_total"] = (
+        rec["memory"]["argument_size_in_bytes"]
+        + rec["memory"]["temp_size_in_bytes"]
+        + rec["memory"]["output_size_in_bytes"]
+        - rec["memory"]["alias_size_in_bytes"]
+    )
+    ca = compiled.cost_analysis() or {}
+    rec["cost"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    txt = compiled.as_text()
+    coll = collective_stats(txt, n_devices=n_dev)
+    rec["collectives"] = {
+        "algorithm_bytes": coll.total_algorithm_bytes,
+        "by_op": coll.by_op,
+        "counts": coll.counts,
+        "n_while_loops": coll.n_while_loops,
+    }
+    rec["collective_schedule"] = coll.schedule[:200]
+    rec["dropped_shardings"] = [
+        f"{l}:{d}:{a}" for (l, d, a) in rules.dropped
+    ][:40]
+    # analytic model flops (full model, not the probe's truncated stack)
+    full_model = build_model(get_config(arch_id))
+    rec["model_flops"] = full_model.model_flops(shape)
+    rec["recurrent_correction_flops"] = full_model.recurrent_correction_flops(shape)
+    pc = full_model.param_counts()
+    rec["params_total"] = pc["total"]
+    rec["params_active"] = pc["active"]
+    if save_hlo:
+        hlo_path = OUT_DIR / (cell_name(arch_id, shape_name, multi_pod, probe_groups) + ".hlo")
+        hlo_path.write_text(txt)
+    return rec
+
+
+def cell_name(arch, shape, multi, probe):
+    s = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+    if probe:
+        s += f"__p{probe}"
+    return s
+
+
+def run_one(arch, shape, multi, probe, out_dir: Path, skip_existing=True,
+            save_hlo=False, rules_overrides=None, tag="") -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = cell_name(arch, shape, multi, probe) + (f"__{tag}" if tag else "")
+    path = out_dir / (name + ".json")
+    if skip_existing and path.exists():
+        rec = json.loads(path.read_text())
+        if "error" not in rec:
+            print(f"[skip] {name}")
+            return rec
+    print(f"[run ] {name} ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape, multi, probe, save_hlo=save_hlo,
+                         rules_overrides=rules_overrides)
+        status = (
+            f"ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+            f"mem/dev={rec['memory']['per_device_total']/2**30:.2f}GiB "
+            f"flops/dev={rec['cost']['flops']:.3e}"
+        )
+    except Exception as e:  # record failure, keep sweeping
+        rec = {"arch": arch, "shape": shape,
+               "mesh": "multi" if multi else "single", "probe": probe,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        status = f"FAIL {type(e).__name__}: {str(e)[:200]}"
+    path.write_text(json.dumps(rec, indent=1))
+    print(f"[done] {name}: {status}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--probe", type=int, default=0)
+    ap.add_argument("--probes", action="store_true",
+                    help="also run probe=1,2 cells (single-pod)")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--skip-existing", action="store_true", default=True)
+    ap.add_argument("--no-skip-existing", dest="skip_existing", action="store_false")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch.replace("-", "_")]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        shapes = cells_for(arch) if args.shape == "all" else [args.shape]
+        overrides = RULES_OVERRIDES.get(arch)
+        for shape in shapes:
+            for multi in meshes:
+                run_one(arch, shape, multi, args.probe, out_dir,
+                        args.skip_existing, args.save_hlo,
+                        rules_overrides=overrides)
+            if args.probes or args.sweep:
+                for p in (1, 2):
+                    run_one(arch, shape, False, p, out_dir,
+                            args.skip_existing, args.save_hlo,
+                            rules_overrides=overrides)
+
+
+if __name__ == "__main__":
+    main()

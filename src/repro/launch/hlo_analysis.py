@@ -1,0 +1,137 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting for §Roofline.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+per-device optimized HLO text: build a symbol table of instruction →
+result bytes, find every collective op, resolve its operand sizes and
+replica-group size, and convert to *algorithm bytes per device*:
+
+  all-reduce       2·B·(g-1)/g        (ring: reduce-scatter + all-gather)
+  all-gather       B_out·(g-1)/g      (received shards)
+  reduce-scatter   B_in·(g-1)/g
+  all-to-all       B·(g-1)/g
+  collective-permute  B
+
+The module is the per-device SPMD program, so these are per-chip link
+bytes — divide by link bandwidth for the collective roofline term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["collective_stats", "CollectiveReport"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(type_str: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_str))
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    # transposed iota form: [a,b]<=[x,y]T(1,0) handled by first regex too
+    return n_devices
+
+
+@dataclasses.dataclass
+class CollectiveReport:
+    total_algorithm_bytes: float
+    by_op: Dict[str, float]
+    counts: Dict[str, int]
+    result_bytes: Dict[str, float]
+    schedule: List[str]  # ordered (opcode, MB, group) lines
+    n_while_loops: int
+
+
+def collective_stats(hlo_text: str, n_devices: int = 1) -> CollectiveReport:
+    # symbol table: instruction name -> result bytes
+    sym: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            sym[m.group(1)] = _result_bytes(m.group(2))
+
+    by_op: Dict[str, float] = defaultdict(float)
+    res_by_op: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = Counter()
+    schedule: List[str] = []
+    n_while = hlo_text.count(" while(")
+
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        base = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        result_b = _result_bytes(type_str)
+        # operand bytes via symbol table
+        args = re.findall(r"%([\w\.\-]+)", line[line.index(opcode) :])
+        operand_b = sum(sym.get(a, 0) for a in args)
+        g = _group_size(line, n_devices)
+        gf = (g - 1) / g if g > 1 else 0.0
+        if base == "all-reduce":
+            algo = 2.0 * operand_b * gf
+        elif base == "all-gather":
+            algo = result_b * gf
+        elif base == "reduce-scatter":
+            algo = operand_b * gf
+        elif base in ("all-to-all", "ragged-all-to-all"):
+            algo = operand_b * gf
+        else:  # collective-permute
+            algo = float(operand_b)
+        by_op[base] += algo
+        res_by_op[base] += result_b
+        counts[base] += 1
+        schedule.append(
+            f"{base:<20s} {operand_b/1e6:9.2f} MB op, {result_b/1e6:9.2f} MB res, g={g}"
+        )
+
+    return CollectiveReport(
+        total_algorithm_bytes=float(sum(by_op.values())),
+        by_op=dict(by_op),
+        counts=dict(counts),
+        result_bytes=dict(res_by_op),
+        schedule=schedule,
+        n_while_loops=n_while,
+    )

@@ -1,0 +1,37 @@
+"""Production mesh construction (TPU v5e pods; host-device placeholders
+for the dry-run)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.distributed.sharding import (
+    MULTI_POD_RULES,
+    SINGLE_POD_RULES,
+    AxisRules,
+)
+
+__all__ = ["make_production_mesh", "rules_for_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )
+
+
+def rules_for_mesh(mesh, overrides=None) -> AxisRules:
+    base = MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    rules = dict(base)
+    if overrides:
+        rules.update(overrides)
+    return AxisRules(rules, mesh=mesh)

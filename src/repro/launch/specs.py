@@ -1,0 +1,80 @@
+"""Abstract input specs + shardings for every (arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the lowered step — weak-type-correct, shardable, no device
+allocation:
+
+* train:   (params, opt_state, batch)
+* prefill: (params, batch)
+* decode:  (params, caches, token, pos)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.sharding import AxisRules, resolve_spec_tree
+from repro.models.model_api import (
+    Model,
+    batch_sharding_specs,
+    batch_specs,
+    build_model,
+)
+from repro.optim.adamw import adamw_init, opt_state_specs
+
+__all__ = ["input_specs", "input_shardings", "abstract_params"]
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[Any, ...]:
+    model = build_model(cfg)
+    params = abstract_params(model)
+    batch = batch_specs(cfg, shape)
+    if shape.kind == "train":
+        opt = jax.eval_shape(adamw_init, params)
+        return (params, opt, batch)
+    if shape.kind == "prefill":
+        return (params, batch)
+    # decode
+    caches = jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch, shape.seq_len)
+    )
+    return (params, caches, batch["token"], batch["pos"])
+
+
+def input_shardings(cfg: ArchConfig, shape: ShapeSpec, rules: AxisRules):
+    """NamedShardings matching input_specs' structure (dim-aware)."""
+    model = build_model(cfg)
+    params = abstract_params(model)
+    p_sh = resolve_spec_tree(model.param_specs(), rules, params)
+    b_specs = batch_specs(cfg, shape)
+    b_sh = resolve_spec_tree(
+        batch_sharding_specs(cfg, shape), rules, b_specs
+    )
+    if shape.kind == "train":
+        opt = jax.eval_shape(adamw_init, params)
+        o_sh = resolve_spec_tree(
+            opt_state_specs(model.param_specs()), rules, opt
+        )
+        return (p_sh, o_sh, b_sh)
+    if shape.kind == "prefill":
+        return (p_sh, b_sh)
+    caches = jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch, shape.seq_len)
+    )
+    c_sh = resolve_spec_tree(model.cache_specs(), rules, caches)
+    return (p_sh, c_sh, b_sh["token"], b_sh["pos"])
+
+
+def replicated(rules: AxisRules):
+    return NamedSharding(rules.mesh, P())

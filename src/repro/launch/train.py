@@ -1,0 +1,81 @@
+"""Production training launcher.
+
+On a real TPU fleet this process runs per host under the cluster
+orchestrator (GKE/xmanager): `jax.distributed.initialize()` wires the
+hosts, `make_production_mesh()` builds the pod mesh, and the Trainer's
+checkpoint/restart + preemption handling carry fault tolerance.  On this
+CPU box it runs the same code on a 1×1 mesh with reduced configs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+      --steps 50 --smoke            # reduced config, local
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+      --multi-pod                   # full config on the pod mesh (TPU)
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import SHAPES, get_config
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_local_mesh, make_production_mesh, rules_for_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (real fleet)")
+    ap.add_argument("--ckpt-dir", default="checkpoints/launch")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+        batch = args.batch or 2
+        seq = args.seq or 64
+    else:
+        shape = SHAPES["train_4k"]
+        batch = args.batch or shape.global_batch
+        seq = args.seq or shape.seq_len
+
+    n_dev = len(jax.devices())
+    if n_dev >= 256:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = make_local_mesh(data=n_dev, model=1)
+    rules = rules_for_mesh(mesh)
+
+    with use_rules(rules), mesh:
+        trainer = Trainer(
+            cfg, batch_size=batch, seq_len=seq,
+            tcfg=TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                               microbatches=args.microbatches),
+            opt_cfg=AdamWConfig(),
+        )
+        trainer.install_signal_handlers()
+        report = trainer.run()
+    print(f"finished at step {report['final_step']} "
+          f"(preempted={report['preempted']}, "
+          f"stragglers={report['straggler_events']})")
+    for m in report["metrics"][-5:]:
+        print(m)
+
+
+if __name__ == "__main__":
+    main()

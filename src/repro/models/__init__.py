@@ -1,0 +1,3 @@
+from .model_api import Model, batch_sharding_specs, batch_specs, build_model, stack_plan
+
+__all__ = ["Model", "batch_sharding_specs", "batch_specs", "build_model", "stack_plan"]

@@ -1,0 +1,453 @@
+"""Transformer layer blocks: dense GQA layers, cross-attention (enc-dec),
+bidirectional encoder layers, and the sort-based MoE FFN.
+
+Block protocol (shared with :mod:`repro.models.recurrent`): a block is a
+namespace of pure functions
+
+  init(cfg, key) -> params            one layer's params
+  spec(cfg) -> pytree of PartitionSpec
+  init_cache(cfg, batch, max_len) -> cache pytree (decode state) or {}
+  apply(cfg, params, x, *, mode, cache, pos, probe, extras)
+      -> (x, new_cache)
+
+``mode`` ∈ {"train", "prefill", "decode"}; ``pos`` is (B,) — the index
+at which the current token(s) start (prefill: all sequences start at 0
+here; decode: the position being generated).  ``probe=True`` unrolls all
+internal scans for roofline probes (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import shard, current_rules
+from . import layers as L
+
+# ---------------------------------------------------------------------------
+# KV cache helpers
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_init(cfg, batch: int, max_len: int):
+    dims = L.attn_dims(cfg)
+    length = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    shape = (batch, length, dims.n_kv, dims.head_dim)
+    return {
+        "k": jnp.zeros(shape, L.cdtype(cfg)),
+        "v": jnp.zeros(shape, L.cdtype(cfg)),
+    }
+
+
+def kv_cache_spec(cfg):
+    """Head-sharded when possible; otherwise sequence-sharded over the
+    model axis (pjit boundary shardings must divide evenly — MHA archs
+    like qwen1.5 (40 heads) / whisper (20) can't head-shard on 16)."""
+    if L.kv_heads_shardable(cfg):
+        s = P("batch", None, "kv_heads", None)
+    else:
+        s = P("batch", "model", None, None)
+    return {"k": s, "v": s}
+
+
+def _ring_fill(x, w):
+    """Fill a ring buffer of length w from a full sequence (B,S,...):
+    slot s gets the *last* position p < S with p % w == s."""
+    S = x.shape[1]
+    slot = jnp.arange(w)
+    p = slot + w * ((S - 1 - slot) // w)
+    p = jnp.clip(p, 0, S - 1)
+    return jnp.take(x, p, axis=1)
+
+
+def build_prefill_cache(cfg, k, v, max_len):
+    """Construct a fresh KV cache from full-sequence K/V (prefill builds
+    caches as outputs — no zero input cache is threaded through the
+    layer loop; §Perf iteration 1)."""
+    dt = L.cdtype(cfg)
+    S = k.shape[1]
+    if cfg.window > 0:
+        w = min(cfg.window, max_len)
+        return {"k": _ring_fill(k, w).astype(dt),
+                "v": _ring_fill(v, w).astype(dt)}
+    if S == max_len:
+        return {"k": k.astype(dt), "v": v.astype(dt)}
+    B = k.shape[0]
+    shape = (B, max_len) + k.shape[2:]
+    return {"k": jnp.zeros(shape, dt).at[:, :S].set(k.astype(dt)),
+            "v": jnp.zeros(shape, dt).at[:, :S].set(v.astype(dt))}
+
+
+def _cache_write_token(cfg, cache, k_new, v_new, pos):
+    """Write one token at pos (B,) — rolling ring buffer if windowed."""
+    slot = pos % cache["k"].shape[1] if cfg.window > 0 else pos
+    b = jnp.arange(k_new.shape[0])
+    k = cache["k"].at[b, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[b, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    return {"k": k, "v": v}
+
+
+def _decode_self_attention(cfg, q, cache, pos):
+    """Self-attention against the cache.  Windowed archs use a ring
+    buffer: every stored slot is inside the window by construction (slots
+    are overwritten in position order), so we mask only by validity and
+    skip the positional window mask (keys carry their RoPE phase from
+    write time; attention is permutation-invariant over keys)."""
+    kv_len = pos + 1  # tokens written so far
+    if cfg.window > 0:
+        win = cache["k"].shape[1]
+        valid = jnp.minimum(kv_len, win)
+        return L.decode_attention(cfg, q, cache["k"], cache["v"], valid,
+                                  apply_window=False)
+    return L.decode_attention(cfg, q, cache["k"], cache["v"], kv_len)
+
+
+# ---------------------------------------------------------------------------
+# Dense decoder layer (attn + MLP) — llama/yi/command-r/qwen + VLM backbone
+# ---------------------------------------------------------------------------
+
+
+class DenseLayer:
+    @staticmethod
+    def init(cfg, key):
+        ks = jax.random.split(key, 4)
+        return {
+            "norm1": L.norm_init(cfg, ks[0]),
+            "attn": L.attention_init(cfg, ks[1]),
+            "norm2": L.norm_init(cfg, ks[2]),
+            "mlp": L.mlp_init(cfg, ks[3]),
+        }
+
+    @staticmethod
+    def spec(cfg):
+        return {
+            "norm1": L.norm_spec(cfg),
+            "attn": L.attention_spec(cfg),
+            "norm2": L.norm_spec(cfg),
+            "mlp": L.mlp_spec(cfg),
+        }
+
+    @staticmethod
+    def init_cache(cfg, batch, max_len):
+        return kv_cache_init(cfg, batch, max_len)
+
+    @staticmethod
+    def cache_spec(cfg):
+        return kv_cache_spec(cfg)
+
+    @staticmethod
+    def apply(cfg, params, x, *, mode, cache=None, pos=None, probe=False,
+              extras=None):
+        h = L.norm_apply(cfg, params["norm1"], x)
+        if mode == "decode":
+            q, k, v = L._project_qkv(cfg, params["attn"], h, pos[:, None])
+            cache = _cache_write_token(cfg, cache, k, v, pos)
+            attn = _decode_self_attention(cfg, q, cache, pos)
+        else:
+            B, S = x.shape[:2]
+            positions = jnp.arange(S)[None, :]
+            q, k, v = L._project_qkv(cfg, params["attn"], h, positions)
+            if mode == "prefill":
+                cache = build_prefill_cache(cfg, k, v, extras["max_len"])
+            attn = L.full_attention(cfg, q, k, v, probe=probe)
+        x = x + attn @ params["attn"]["wo"].astype(x.dtype)
+        x = shard(x, "batch", "res_seq", "dmodel")
+        h = L.norm_apply(cfg, params["norm2"], x)
+        x = x + L.mlp_apply(cfg, params["mlp"], h)
+        return shard(x, "batch", "res_seq", "dmodel"), cache
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional encoder layer (whisper encoder)
+# ---------------------------------------------------------------------------
+
+
+class EncoderLayer:
+    init = DenseLayer.init
+    spec = DenseLayer.spec
+
+    @staticmethod
+    def init_cache(cfg, batch, max_len):
+        return {}
+
+    @staticmethod
+    def cache_spec(cfg):
+        return {}
+
+    @staticmethod
+    def apply(cfg, params, x, *, mode, cache=None, pos=None, probe=False,
+              extras=None):
+        h = L.norm_apply(cfg, params["norm1"], x)
+        B, S = x.shape[:2]
+        positions = jnp.arange(S)[None, :]
+        q, k, v = L._project_qkv(cfg, params["attn"], h, positions, rope=False)
+        # bidirectional: single-shot softmax per q chunk with full mask
+        dims = L.attn_dims(cfg)
+        qg = q.reshape(B, S, dims.n_kv, dims.group, dims.head_dim)
+        scale = 1.0 / math.sqrt(dims.head_dim)
+        scores = jnp.einsum("bckgd,btkd->bkgct", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bkgct,btkd->bckgd", probs.astype(x.dtype), v,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+        attn = attn.reshape(B, S, dims.n_q * dims.head_dim)
+        x = x + attn @ params["attn"]["wo"].astype(x.dtype)
+        h = L.norm_apply(cfg, params["norm2"], x)
+        x = x + L.mlp_apply(cfg, params["mlp"], h)
+        return shard(x, "batch", "res_seq", "dmodel"), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention decoder layer (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+class CrossLayer:
+    @staticmethod
+    def init(cfg, key):
+        ks = jax.random.split(key, 6)
+        return {
+            "norm1": L.norm_init(cfg, ks[0]),
+            "attn": L.attention_init(cfg, ks[1]),
+            "norm_x": L.norm_init(cfg, ks[2]),
+            "xattn": L.attention_init(cfg, ks[3]),
+            "norm2": L.norm_init(cfg, ks[4]),
+            "mlp": L.mlp_init(cfg, ks[5]),
+        }
+
+    @staticmethod
+    def spec(cfg):
+        return {
+            "norm1": L.norm_spec(cfg),
+            "attn": L.attention_spec(cfg),
+            "norm_x": L.norm_spec(cfg),
+            "xattn": L.attention_spec(cfg),
+            "norm2": L.norm_spec(cfg),
+            "mlp": L.mlp_spec(cfg),
+        }
+
+    @staticmethod
+    def init_cache(cfg, batch, max_len):
+        c = kv_cache_init(cfg, batch, max_len)
+        dims = L.attn_dims(cfg)
+        xshape = (batch, cfg.enc_seq, dims.n_kv, dims.head_dim)
+        c["xk"] = jnp.zeros(xshape, L.cdtype(cfg))
+        c["xv"] = jnp.zeros(xshape, L.cdtype(cfg))
+        return c
+
+    @staticmethod
+    def cache_spec(cfg):
+        s = kv_cache_spec(cfg)
+        s["xk"] = P("batch", None, "kv_heads", None)
+        s["xv"] = P("batch", None, "kv_heads", None)
+        return s
+
+    @staticmethod
+    def _cross_kv(cfg, params, enc):
+        dims = L.attn_dims(cfg)
+        dt = enc.dtype
+        B, T = enc.shape[:2]
+        k = (enc @ params["wk"].astype(dt)).reshape(B, T, cfg.n_kv_heads, dims.head_dim)
+        v = (enc @ params["wv"].astype(dt)).reshape(B, T, cfg.n_kv_heads, dims.head_dim)
+        rep = dims.n_kv // cfg.n_kv_heads
+        if rep > 1:
+            k, v = jnp.repeat(k, rep, axis=2), jnp.repeat(v, rep, axis=2)
+        return k, v
+
+    @staticmethod
+    def apply(cfg, params, x, *, mode, cache=None, pos=None, probe=False,
+              extras=None):
+        B = x.shape[0]
+        # -- causal self attention ---------------------------------------
+        h = L.norm_apply(cfg, params["norm1"], x)
+        if mode == "decode":
+            q, k, v = L._project_qkv(cfg, params["attn"], h, pos[:, None], rope=False)
+            cache = dict(cache)
+            sc = _cache_write_token(cfg, {"k": cache["k"], "v": cache["v"]}, k, v, pos)
+            cache.update(sc)
+            attn = L.decode_attention(cfg, q, cache["k"], cache["v"], pos + 1)
+        else:
+            S = x.shape[1]
+            positions = jnp.arange(S)[None, :]
+            q, k, v = L._project_qkv(cfg, params["attn"], h, positions, rope=False)
+            if mode == "prefill":
+                cache = build_prefill_cache(cfg, k, v, extras["max_len"])
+            attn = L.full_attention(cfg, q, k, v, probe=probe)
+        x = x + attn @ params["attn"]["wo"].astype(x.dtype)
+        # -- cross attention ------------------------------------------------
+        h = L.norm_apply(cfg, params["norm_x"], x)
+        dims = L.attn_dims(cfg)
+        S = x.shape[1]
+        dt = x.dtype
+        q = (h @ params["xattn"]["wq"].astype(dt)).reshape(B, S, dims.n_q, dims.head_dim)
+        if mode == "decode":
+            xk, xv = cache["xk"], cache["xv"]
+        else:
+            enc = extras["enc"]
+            xk, xv = CrossLayer._cross_kv(cfg, params["xattn"], enc)
+            if mode == "prefill":
+                cache = dict(cache) if cache else {}
+                cache["xk"] = xk.astype(L.cdtype(cfg))
+                cache["xv"] = xv.astype(L.cdtype(cfg))
+        qg = q.reshape(B, S, dims.n_kv, dims.group, dims.head_dim)
+        scale = 1.0 / math.sqrt(dims.head_dim)
+        scores = jnp.einsum("bckgd,btkd->bkgct", qg, xk,
+                            preferred_element_type=jnp.float32) * scale
+        probs = jax.nn.softmax(scores, axis=-1)
+        xa = jnp.einsum("bkgct,btkd->bckgd", probs.astype(dt), xv,
+                        preferred_element_type=jnp.float32).astype(dt)
+        xa = xa.reshape(B, S, dims.n_q * dims.head_dim)
+        x = x + xa @ params["xattn"]["wo"].astype(dt)
+        # -- MLP ----------------------------------------------------------------
+        h = L.norm_apply(cfg, params["norm2"], x)
+        x = x + L.mlp_apply(cfg, params["mlp"], h)
+        return shard(x, "batch", "res_seq", "dmodel"), cache
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN (sort-based token dispatch, capacity drop) + MoE layer
+# ---------------------------------------------------------------------------
+
+
+def moe_init(cfg, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (d, e)),
+        "w_in": L.dense_init(ks[1], (e, d, f), in_axis=1),
+        "w_gate": L.dense_init(ks[2], (e, d, f), in_axis=1),
+        "w_out": L.dense_init(ks[3], (e, f, d), in_axis=1),
+    }
+
+
+def moe_spec(cfg):
+    return {
+        "router": P(None, None),
+        "w_in": P("experts", "fsdp", None),
+        "w_gate": P("experts", "fsdp", None),
+        "w_out": P("experts", None, "fsdp"),
+    }
+
+
+def _moe_groups(n_tokens: int) -> int:
+    """Dispatch group count = number of batch shards, so every sort /
+    scatter stays shard-local (§Perf iteration 2: GSPMD partitions the
+    ungrouped global sort/scatter by replicating the token stream, which
+    was the dominant collective + memory blowup in the baseline)."""
+    rules = current_rules()
+    axes = rules.axes_for("batch")
+    g = rules.mesh_size(axes) if axes else 1
+    while g > 1 and n_tokens % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_apply(cfg, params, x):
+    """Sort-based MoE dispatch, grouped per batch shard: local top-k →
+    local argsort → local scatter into (G, E, C, D) capacity buffers →
+    expert-sharded grouped matmul → local combine.  The only cross-shard
+    traffic is the expert-parallel boundary on the buffers, which XLA
+    lowers to all-to-all / all-reduce on the model axis.  Dropped tokens
+    (over capacity) contribute nothing."""
+    B, S, D = x.shape
+    N = B * S
+    K, E = cfg.top_k, cfg.n_experts
+    G = _moe_groups(N)
+    T = N // G
+    capacity = max(1, int(math.ceil(T * K / E * cfg.capacity_factor)))
+    dt = x.dtype
+
+    xg = shard(x.reshape(G, T, D), "batch", None, None)
+    logits = (xg @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G,T,E)
+    vals, eidx = jax.lax.top_k(probs, K)  # (G,T,K)
+    vals = vals / jnp.sum(vals, axis=-1, keepdims=True)
+
+    te = eidx.reshape(G, T * K)
+    tw = vals.reshape(G, T * K)
+    order = jnp.argsort(te, axis=1)  # stable, per group
+    se = jnp.take_along_axis(te, order, axis=1)
+    sw = jnp.take_along_axis(tw, order, axis=1)
+    si = order // K  # source token within the group
+
+    garange = jnp.arange(G)[:, None]
+    counts = jnp.zeros((G, E), jnp.int32).at[garange, se].add(1)
+    offsets = jnp.cumsum(counts, axis=1) - counts  # exclusive, per group
+    pos = jnp.arange(T * K)[None, :] - jnp.take_along_axis(offsets, se, axis=1)
+    keep = pos < capacity
+    dest_e = jnp.where(keep, se, E)  # E = drop row (OOB, mode="drop")
+    dest_p = jnp.where(keep, pos, 0)
+
+    def scatter_group(xf, de, dp, sidx):
+        buf = jnp.zeros((E, capacity, D), dt)
+        return buf.at[de, dp].set(xf[sidx], mode="drop")
+
+    buf = jax.vmap(scatter_group)(xg, dest_e, dest_p, si)  # (G,E,C,D)
+    buf = shard(buf, "batch", "experts", None, None)
+
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(dt))
+    ) * jnp.einsum("gecd,edf->gecf", buf, params["w_in"].astype(dt))
+    h = shard(h, "batch", "experts", None, None)
+    y = jnp.einsum("gecf,efd->gecd", h, params["w_out"].astype(dt))
+    y = shard(y, "batch", "experts", None, None)
+
+    def combine_group(yg, de, dp, sidx, w, kp):
+        safe_e = jnp.minimum(de, E - 1)
+        y_tok = yg[safe_e, dp] * (w * kp)[:, None].astype(dt)
+        return jnp.zeros((T, D), dt).at[sidx].add(y_tok)
+
+    out = jax.vmap(combine_group)(y, dest_e, dest_p, si, sw, keep)
+    out = shard(out, "batch", None, None)
+    return out.reshape(B, S, D)
+
+
+class MoELayer:
+    @staticmethod
+    def init(cfg, key):
+        ks = jax.random.split(key, 4)
+        return {
+            "norm1": L.norm_init(cfg, ks[0]),
+            "attn": L.attention_init(cfg, ks[1]),
+            "norm2": L.norm_init(cfg, ks[2]),
+            "moe": moe_init(cfg, ks[3]),
+        }
+
+    @staticmethod
+    def spec(cfg):
+        return {
+            "norm1": L.norm_spec(cfg),
+            "attn": L.attention_spec(cfg),
+            "norm2": L.norm_spec(cfg),
+            "moe": moe_spec(cfg),
+        }
+
+    init_cache = staticmethod(kv_cache_init)
+
+    @staticmethod
+    def cache_spec(cfg):
+        return kv_cache_spec(cfg)
+
+    @staticmethod
+    def apply(cfg, params, x, *, mode, cache=None, pos=None, probe=False,
+              extras=None):
+        h = L.norm_apply(cfg, params["norm1"], x)
+        if mode == "decode":
+            q, k, v = L._project_qkv(cfg, params["attn"], h, pos[:, None])
+            cache = _cache_write_token(cfg, cache, k, v, pos)
+            attn = _decode_self_attention(cfg, q, cache, pos)
+        else:
+            S = x.shape[1]
+            positions = jnp.arange(S)[None, :]
+            q, k, v = L._project_qkv(cfg, params["attn"], h, positions)
+            if mode == "prefill":
+                cache = build_prefill_cache(cfg, k, v, extras["max_len"])
+            attn = L.full_attention(cfg, q, k, v, probe=probe)
+        x = x + attn @ params["attn"]["wo"].astype(x.dtype)
+        h = L.norm_apply(cfg, params["norm2"], x)
+        x = x + moe_apply(cfg, params["moe"], h)
+        return shard(x, "batch", "res_seq", "dmodel"), cache

@@ -1,0 +1,440 @@
+"""Model assembly: block stacks → Model (init / loss / prefill / decode).
+
+A model is a sequence of *stacks*; each stack repeats a *group pattern*
+of blocks (e.g. ``("rec","rec","attn") × 8``) with parameters stacked on
+a leading group axis and applied with ``lax.scan`` (or a python loop in
+``probe`` mode — roofline probes need fully-unrolled HLO, DESIGN.md).
+
+Families → stack plans:
+  dense / vlm      [("dense",) × L]
+  moe              [("moe",) × L]
+  audio (whisper)  encoder [("enc",) × L_enc] + decoder [("cross",) × L]
+  ssm (xlstm)      [("mlstm","slstm") × L/2]
+  hybrid (rg)      [("rec","rec","attn") × 8, ("rec","rec") × 1]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.sharding import shard
+from . import layers as L
+from .blocks import CrossLayer, DenseLayer, EncoderLayer, MoELayer
+from .recurrent import MLSTMLayer, RGLRULayer, SLSTMLayer
+
+BLOCKS = {
+    "dense": DenseLayer,
+    "moe": MoELayer,
+    "enc": EncoderLayer,
+    "cross": CrossLayer,
+    "mlstm": MLSTMLayer,
+    "slstm": SLSTMLayer,
+    "rec": RGLRULayer,
+    "attn": DenseLayer,
+}
+
+
+def stack_plan(cfg: ArchConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    if cfg.family in ("dense", "vlm"):
+        pattern: Tuple[str, ...] = ("dense",)
+    elif cfg.family == "moe":
+        pattern = ("moe",)
+    elif cfg.family == "audio":
+        pattern = ("cross",)
+    elif cfg.family in ("ssm", "hybrid"):
+        pattern = cfg.block_pattern
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    k = len(pattern)
+    full, rest = divmod(cfg.n_layers, k)
+    plan = [(pattern, full)]
+    if rest:
+        plan.append((pattern[:rest], 1))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# stack init / spec / apply
+# ---------------------------------------------------------------------------
+
+
+def _group_init(cfg, pattern, key):
+    ks = jax.random.split(key, len(pattern))
+    return {f"b{i}": BLOCKS[p].init(cfg, ks[i]) for i, p in enumerate(pattern)}
+
+
+def _group_spec(cfg, pattern):
+    return {f"b{i}": BLOCKS[p].spec(cfg) for i, p in enumerate(pattern)}
+
+
+def _group_cache(cfg, pattern, batch, max_len):
+    return {f"b{i}": BLOCKS[p].init_cache(cfg, batch, max_len)
+            for i, p in enumerate(pattern)}
+
+
+def _group_cache_spec(cfg, pattern):
+    return {f"b{i}": BLOCKS[p].cache_spec(cfg) for i, p in enumerate(pattern)}
+
+
+def _group_apply(cfg, pattern, params, x, *, mode, cache, pos, probe, extras):
+    new_cache = {}
+    for i, p in enumerate(pattern):
+        c = cache.get(f"b{i}") if cache is not None else None
+        x, nc = BLOCKS[p].apply(
+            cfg, params[f"b{i}"], x,
+            mode=mode, cache=c, pos=pos, probe=probe, extras=extras,
+        )
+        new_cache[f"b{i}"] = nc
+    return x, (new_cache if (cache is not None or mode == "prefill") else None)
+
+
+def _stack_apply(cfg, pattern, n_groups, params, x, *, mode, cache, pos,
+                 probe, extras, remat):
+    """params/cache leaves carry a leading (n_groups,) axis.
+
+    Memory paths (§Perf iteration 1, EXPERIMENTS.md):
+    * train   — scan over groups, remat'd body, no cache.
+    * prefill — scan with cache as *output only* (ys): blocks construct
+      their caches from scratch, so no zero-filled input cache is ever
+      threaded through the loop (halves prefill cache traffic).
+    * decode  — ``fori_loop`` with the stacked cache as loop *carry*,
+      updated in place via dynamic_update_index: XLA aliases the donated
+      cache buffer instead of double-buffering scan xs/ys (3× HBM-
+      traffic / temp-memory reduction on 32k-KV decode cells).
+    """
+    gapply = functools.partial(
+        _group_apply, cfg, pattern,
+        mode=mode, pos=pos, probe=probe, extras=extras,
+    )
+    if probe or n_groups == 1:
+        caches = []
+        for g in range(n_groups):
+            p_g = jax.tree.map(lambda a: a[g], params)
+            c_g = jax.tree.map(lambda a: a[g], cache) if cache is not None else None
+            x, nc = gapply(p_g, x, cache=c_g)
+            caches.append(nc)
+        new_cache = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+            if caches[0] is not None else None
+        )
+        return x, new_cache
+
+    if mode == "train":
+        def body(h, p_g):
+            h2, _ = gapply(p_g, h, cache=None)
+            return h2, None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params)
+        return x, None
+
+    if mode == "prefill":
+        def body(h, p_g):
+            h2, nc = gapply(p_g, h, cache=None)
+            return h2, nc
+        x, new_cache = jax.lax.scan(body, x, params)
+        return x, new_cache
+
+    # decode: in-place carry update
+    def body(g, carry):
+        h, full_cache = carry
+        p_g = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, g, 0, keepdims=False),
+            params,
+        )
+        c_g = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, g, 0, keepdims=False),
+            full_cache,
+        )
+        h2, nc = gapply(p_g, h, cache=c_g)
+        full_cache = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), g, 0
+            ),
+            full_cache, nc,
+        )
+        return (h2, full_cache)
+
+    x, new_cache = jax.lax.fori_loop(0, n_groups, body, (x, cache))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- init / specs ------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {"embed": L.embed_init(cfg, keys[0])}
+        params["final_norm"] = L.norm_init(cfg, keys[1])
+        stacks = []
+        for si, (pattern, G) in enumerate(stack_plan(cfg)):
+            gks = jax.random.split(keys[2 + si], G)
+            stacks.append(jax.vmap(lambda k: _group_init(cfg, pattern, k))(gks))
+        params["stacks"] = stacks
+        if cfg.family == "audio":
+            egks = jax.random.split(keys[6], cfg.n_enc_layers)
+            params["enc_stack"] = jax.vmap(
+                lambda k: _group_init(cfg, ("enc",), k)
+            )(egks)
+            params["enc_norm"] = L.norm_init(cfg, keys[7])
+            params["enc_pos"] = L.dense_init(keys[5], (cfg.enc_seq, cfg.d_model)) * 0.02
+        return params
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+
+        def stacked(tree):
+            return jax.tree.map(
+                lambda s: P(*((None,) + tuple(s))), tree,
+                is_leaf=lambda s: isinstance(s, P),
+            )
+
+        specs: Dict[str, Any] = {
+            "embed": L.embed_spec(cfg),
+            "final_norm": L.norm_spec(cfg),
+            "stacks": [
+                stacked(_group_spec(cfg, pattern))
+                for pattern, _ in stack_plan(cfg)
+            ],
+        }
+        if cfg.family == "audio":
+            specs["enc_stack"] = stacked(_group_spec(cfg, ("enc",)))
+            specs["enc_norm"] = L.norm_spec(cfg)
+            specs["enc_pos"] = P(None, "fsdp")
+        return specs
+
+    # ---- caches ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        caches = []
+        for pattern, G in stack_plan(cfg):
+            one = _group_cache(cfg, pattern, batch, max_len)
+            caches.append(
+                jax.tree.map(lambda a: jnp.broadcast_to(a, (G,) + a.shape), one)
+            )
+        return caches
+
+    def cache_specs(self):
+        cfg = self.cfg
+        out = []
+        for pattern, _ in stack_plan(cfg):
+            tree = _group_cache_spec(cfg, pattern)
+            out.append(jax.tree.map(
+                lambda s: P(*((None,) + tuple(s))), tree,
+                is_leaf=lambda s: isinstance(s, P),
+            ))
+        return out
+
+    # ---- forward helpers ---------------------------------------------------
+    def _embed_train(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        pos = jnp.arange(tokens.shape[1])[None, :]
+        x = L.embed_tokens(cfg, params["embed"], tokens,
+                           pos if cfg.pos_embed == "learned" else None)
+        if cfg.family == "vlm":
+            patches = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            x = shard(x, "batch", "res_seq", "dmodel")
+        return x
+
+    def _encode(self, params, frames, probe=False):
+        cfg = self.cfg
+        x = frames.astype(L.cdtype(cfg))
+        x = x + params["enc_pos"].astype(x.dtype)[None]
+        x = shard(x, "batch", "res_seq", "dmodel")
+        x, _ = _stack_apply(
+            cfg, ("enc",), cfg.n_enc_layers, params["enc_stack"], x,
+            mode="train", cache=None, pos=None, probe=probe, extras=None,
+            remat=True,
+        )
+        return L.norm_apply(cfg, params["enc_norm"], x)
+
+    def _backbone(self, params, x, *, mode, caches, pos, probe, extras, remat):
+        cfg = self.cfg
+        new_caches = []
+        for (pattern, G), sp, sc in zip(
+            stack_plan(cfg), params["stacks"],
+            caches if caches is not None else [None] * 8,
+        ):
+            x, nc = _stack_apply(
+                cfg, pattern, G, sp, x, mode=mode, cache=sc, pos=pos,
+                probe=probe, extras=extras, remat=remat,
+            )
+            new_caches.append(nc)
+        x = L.norm_apply(cfg, params["final_norm"], x)
+        has_caches = any(c is not None for c in new_caches)
+        return x, (new_caches if has_caches else None)
+
+    # ---- public API ------------------------------------------------------------
+    def loss(self, params, batch, *, probe: bool = False, remat: bool = True):
+        cfg = self.cfg
+        x = self._embed_train(params, batch)
+        extras = None
+        if cfg.family == "audio":
+            extras = {"enc": self._encode(params, batch["frames"], probe=probe)}
+        x, _ = self._backbone(params, x, mode="train", caches=None, pos=None,
+                              probe=probe, extras=extras, remat=remat)
+        labels = batch["labels"]
+        if cfg.family == "vlm":  # loss only over text positions
+            x = x[:, -labels.shape[1]:]
+        return L.xent_loss(cfg, params["embed"], x, labels, probe=probe)
+
+    def prefill(self, params, batch, max_len: int, *, probe: bool = False):
+        """Run the full prompt, returning (last-token logits, caches).
+
+        Caches are *constructed* by the blocks (scan outputs), never
+        threaded in as zero-filled inputs — §Perf iteration 1."""
+        cfg = self.cfg
+        x = self._embed_train(params, batch)
+        extras = {"max_len": max_len}
+        if cfg.family == "audio":
+            extras["enc"] = self._encode(params, batch["frames"], probe=probe)
+        x, caches = self._backbone(params, x, mode="prefill", caches=None,
+                                   pos=None, probe=probe, extras=extras,
+                                   remat=False)
+        logits = L.lm_logits(cfg, params["embed"], x[:, -1:])
+        return logits[:, 0], caches
+
+    def decode_step(self, params, caches, token, pos):
+        """token: (B,) int32; pos: (B,) int32 positions being generated."""
+        cfg = self.cfg
+        x = L.embed_tokens(
+            cfg, params["embed"], token[:, None],
+            pos[:, None] if cfg.pos_embed == "learned" else None,
+        )
+        x, caches = self._backbone(params, x, mode="decode", caches=caches,
+                                   pos=pos, probe=False, extras=None,
+                                   remat=False)
+        logits = L.lm_logits(cfg, params["embed"], x)
+        return logits[:, 0], caches
+
+    # ---- accounting -----------------------------------------------------------
+    def param_counts(self) -> Dict[str, float]:
+        """total / active / embedding parameter counts (analytic, from
+        abstract init shapes)."""
+        shapes = jax.eval_shape(self.init, jax.random.key(0))
+        total = active = embed = 0.0
+        k_over_e = (
+            self.cfg.top_k / self.cfg.n_experts if self.cfg.is_moe else 1.0
+        )
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            n = float(np.prod(leaf.shape))
+            keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            stacked = any(k == "stacks" for k in keys)
+            n_eff = n
+            is_embed = any(k in ("table", "head", "pos", "enc_pos") for k in keys)
+            is_expert = any(k in ("w_in", "w_gate", "w_out") for k in keys) and any(
+                k == "moe" for k in keys
+            )
+            total += n
+            if is_embed:
+                embed += n
+                continue
+            active += n_eff * (k_over_e if is_expert else 1.0)
+        return {"total": total, "active": active, "embed": embed}
+
+    def model_flops(self, shape: ShapeSpec) -> float:
+        """MODEL_FLOPS per step: 6·N_active·tokens (train) or
+        2·N_active·tokens (decode/prefill fwd-only), N excl. embeddings
+        but incl. the LM head matmul."""
+        counts = self.param_counts()
+        n = counts["active"]
+        head = 0.0 if self.cfg.family == "audio" else self.cfg.d_model * self.cfg.vocab
+        n = n + head
+        if shape.kind == "train":
+            tokens = shape.seq_len * shape.global_batch
+            return 6.0 * n * tokens
+        if shape.kind == "prefill":
+            tokens = shape.seq_len * shape.global_batch
+            return 2.0 * n * tokens
+        return 2.0 * n * shape.global_batch  # decode: one token / seq
+
+    def recurrent_correction_flops(self, shape: ShapeSpec) -> float:
+        """Analytic FLOPs hidden inside sequential while-loops (sLSTM),
+        added to probe-derived HLO FLOPs (DESIGN.md)."""
+        cfg = self.cfg
+        if cfg.family != "ssm" or shape.kind == "decode":
+            return 0.0
+        n_slstm = sum(
+            pattern.count("slstm") * G for pattern, G in stack_plan(cfg)
+        )
+        f = SLSTMLayer.recurrent_flops(cfg, shape.global_batch, shape.seq_len)
+        mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd≈2x +remat fwd
+        return n_slstm * f * mult
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# batch shape specs (abstract inputs for smoke tests and the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for an (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            s_txt = S - cfg.n_patches
+            d = {
+                "tokens": jax.ShapeDtypeStruct((B, s_txt), i32),
+                "labels": jax.ShapeDtypeStruct((B, s_txt), i32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype)
+                ),
+            }
+        elif cfg.family == "audio":
+            d = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+                "frames": jax.ShapeDtypeStruct(
+                    (B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+                ),
+            }
+        else:
+            d = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if shape.kind == "prefill":
+            d.pop("labels")
+        return d
+    # decode: one token; the KV/state cache is a separate argument
+    return {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+    }
+
+
+def batch_sharding_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, P]:
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": P("batch", None)}
+        if shape.kind == "train":
+            out["labels"] = P("batch", None)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = P("batch", None, None)
+        if cfg.family == "audio":
+            out["frames"] = P("batch", None, None)
+        return out
+    return {"token": P("batch"), "pos": P("batch")}

@@ -1,0 +1,423 @@
+"""Recurrent sequence mixers: mLSTM + sLSTM (xLSTM) and RG-LRU (Griffin /
+RecurrentGemma).
+
+TPU adaptation notes (recorded in DESIGN.md):
+
+* **mLSTM** uses the chunkwise-parallel form: quadratic attention-like
+  compute *within* a chunk (``cfg.rec_chunk`` tokens) and a first-order
+  linear recurrence over chunk summaries evaluated with
+  ``jax.lax.associative_scan`` — log-depth, no ``while`` loop, so XLA
+  cost analysis counts it fully (important for §Roofline).
+* **Gating**: we use sigmoid input gates instead of the paper's
+  exponential gating + max-stabilizer.  Same compute/memory structure,
+  unconditionally stable; a numerics ablation, not a systems change.
+* **sLSTM** has a true nonlinear recurrence (h_{t-1} feeds the gates) —
+  not chunkable.  It runs as a ``lax.scan`` over time; its FLOPs are
+  added analytically in the roofline (see launch/roofline.py) because a
+  while-loop body is counted once by cost analysis.
+* **RG-LRU** is a diagonal linear recurrence → ``associative_scan``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import shard
+from . import layers as L
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, kernel, buf=None):
+    """Depthwise causal conv. x: (B,S,D); kernel: (W,D); buf: (B,W-1,D)
+    carry-in for decode/prefill continuity (None → zero history).
+    Returns (y, new_buf)."""
+    B, S, D = x.shape
+    W = kernel.shape[0]
+    hist = jnp.zeros((B, W - 1, D), x.dtype) if buf is None else buf.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)  # (B, S+W-1, D)
+    y = sum(
+        xp[:, i : i + S] * kernel[i].astype(x.dtype)[None, None, :]
+        for i in range(W)
+    )
+    new_buf = xp[:, -(W - 1):]
+    return y, new_buf
+
+
+def _linear_scan(a, b, probe: bool = False):
+    """First-order linear recurrence h_j = a_j * h_{j-1} + b_j along axis 0
+    via associative_scan (a broadcasts over b's trailing dims)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    return jax.lax.associative_scan(combine, (a, b), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+
+class MLSTMLayer:
+    """Pre-norm mLSTM block: up-proj (pf=2) → conv → q,k,v + scalar head
+    gates → chunkwise matrix-memory recurrence → gated output → down-proj.
+    Carries its own expansion (cfg.d_ff == 0 for xlstm)."""
+
+    @staticmethod
+    def _dims(cfg):
+        M = 2 * cfg.d_model
+        return M, cfg.n_heads, M // cfg.n_heads
+
+    @staticmethod
+    def init(cfg, key):
+        D = cfg.d_model
+        M, H, m = MLSTMLayer._dims(cfg)
+        ks = jax.random.split(key, 8)
+        return {
+            "norm": L.norm_init(cfg, ks[0]),
+            "w_up": L.dense_init(ks[1], (D, 2 * M)),
+            "conv": L.dense_init(ks[2], (cfg.conv_width, M)),
+            "wq": L.dense_init(ks[3], (M, M)),
+            "wk": L.dense_init(ks[4], (M, M)),
+            "wv": L.dense_init(ks[5], (M, M)),
+            "w_gates": L.dense_init(ks[6], (M, 2 * H)),
+            "w_down": L.dense_init(ks[7], (M, D)),
+            "out_scale": jnp.ones((M,), L.pdtype(cfg)),
+        }
+
+    @staticmethod
+    def spec(cfg):
+        return {
+            "norm": L.norm_spec(cfg),
+            "w_up": P("fsdp", "ff"),
+            "conv": P(None, "ff"),
+            "wq": P("fsdp", "ff"),
+            "wk": P("fsdp", "ff"),
+            "wv": P("fsdp", "ff"),
+            "w_gates": P("fsdp", None),
+            "w_down": P("ff", "fsdp"),
+            "out_scale": P("ff"),
+        }
+
+    @staticmethod
+    def init_cache(cfg, batch, max_len):
+        M, H, m = MLSTMLayer._dims(cfg)
+        return {
+            "C": jnp.zeros((batch, H, m, m), jnp.float32),
+            "n": jnp.zeros((batch, H, m), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, M), L.cdtype(cfg)),
+        }
+
+    @staticmethod
+    def cache_spec(cfg):
+        return {
+            "C": P("batch", None, None, "ff"),
+            "n": P("batch", None, None),
+            "conv": P("batch", None, "ff"),
+        }
+
+    @staticmethod
+    def _qkv_gates(cfg, params, xm, conv_buf):
+        M, H, m = MLSTMLayer._dims(cfg)
+        dt = xm.dtype
+        u, new_buf = _causal_conv(xm, params["conv"], conv_buf)
+        u = jax.nn.silu(u)
+        B, S = xm.shape[:2]
+        q = (u @ params["wq"].astype(dt)).reshape(B, S, H, m)
+        k = (u @ params["wk"].astype(dt)).reshape(B, S, H, m)
+        v = (xm @ params["wv"].astype(dt)).reshape(B, S, H, m)
+        gates = (xm @ params["w_gates"].astype(dt)).astype(jnp.float32)
+        gates = gates.reshape(B, S, H, 2)
+        i = jax.nn.sigmoid(gates[..., 0])
+        lf = jax.nn.log_sigmoid(gates[..., 1])
+        q = q / math.sqrt(m)
+        return q, k, v, i, lf, new_buf
+
+    @staticmethod
+    def apply(cfg, params, x, *, mode, cache=None, pos=None, probe=False,
+              extras=None):
+        D = cfg.d_model
+        M, H, m = MLSTMLayer._dims(cfg)
+        dt = x.dtype
+        h_in = L.norm_apply(cfg, params["norm"], x)
+        up = h_in @ params["w_up"].astype(dt)
+        xm, z = up[..., :M], up[..., M:]
+        xm = shard(xm, "batch", "seq", "ff")
+
+        if mode == "decode":
+            q, k, v, i, lf, new_buf = MLSTMLayer._qkv_gates(
+                cfg, params, xm, cache["conv"]
+            )
+            q1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+            i1, f1 = i[:, 0], jnp.exp(lf[:, 0])  # (B,H)
+            C = cache["C"] * f1[..., None, None] + (
+                i1[..., None, None] * k1[..., :, None] * v1[..., None, :]
+            )
+            nv = cache["n"] * f1[..., None] + i1[..., None] * k1
+            num = jnp.einsum("zha,zhae->zhe", q1, C)
+            den = jnp.maximum(jnp.abs(jnp.einsum("zha,zha->zh", q1, nv)), 1.0)
+            h = (num / den[..., None]).reshape(x.shape[0], 1, M).astype(dt)
+            new_cache = {"C": C, "n": nv, "conv": new_buf}
+        else:
+            q, k, v, i, lf, new_buf = MLSTMLayer._qkv_gates(cfg, params, xm, None)
+            B, S = x.shape[:2]
+            c = L.divisor_chunk(S, cfg.rec_chunk)
+            n = S // c
+
+            def cs(t, fdt=jnp.float32):  # (B,S,H,...) -> (n,B,c,H,...)
+                return (
+                    t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1).astype(fdt)
+                )
+
+            qc, kc, vc, ic, lfc = cs(q), cs(k), cs(v), cs(i), cs(lf)
+            cum = jnp.cumsum(lfc, axis=2)  # (n,B,c,H) inclusive
+            a_chunk = jnp.exp(cum[:, :, -1])  # (n,B,H)
+            # chunk summaries: ΔC = Σ_s exp(cum_end - cum_s) i_s k_s v_sᵀ
+            w_s = jnp.exp(cum[:, :, -1:, :] - cum) * ic  # (n,B,c,H)
+            dC = jnp.einsum("nzch,nzcha,nzche->nzhae", w_s, kc, vc)
+            dn = jnp.einsum("nzch,nzcha->nzha", w_s, kc)
+            # inter-chunk states via associative scan, shifted to "before"
+            A, Cs = _linear_scan(a_chunk[..., None, None], dC)
+            _, ns = _linear_scan(a_chunk[..., None], dn)
+            zerosC = jnp.zeros_like(Cs[:1])
+            C_in = jnp.concatenate([zerosC, Cs[:-1]], axis=0)
+            n_in = jnp.concatenate([jnp.zeros_like(ns[:1]), ns[:-1]], axis=0)
+            # intra-chunk attention-like term
+            scores = jnp.einsum("nztha,nzsha->nzhts", qc, kc)
+            dlt = cum[..., :, None, :] - cum[..., None, :, :]  # (n,B,t,s,H)
+            mask = jnp.tril(jnp.ones((c, c), bool))
+            w_ts = jnp.where(
+                mask[None, None, :, :, None], jnp.exp(dlt), 0.0
+            ) * ic[..., None, :, :]
+            A_ts = scores * jnp.moveaxis(w_ts, -1, 2)  # (n,B,H,t,s)
+            num = jnp.einsum("nzhts,nzsha->nztha", A_ts, vc)
+            num = num + jnp.exp(cum)[..., None] * jnp.einsum(
+                "nztha,nzhae->nzthe", qc, C_in
+            )
+            den = jnp.sum(A_ts, axis=-1).swapaxes(2, 3)  # (n,B,t,H)
+            den = den + jnp.exp(cum) * jnp.einsum("nztha,nzha->nzth", qc, n_in)
+            den = jnp.maximum(jnp.abs(den), 1.0)
+            h = (num / den[..., None]).swapaxes(0, 1).reshape(B, S, M).astype(dt)
+            new_cache = None
+            if mode == "prefill":
+                new_cache = {"C": Cs[-1], "n": ns[-1], "conv": new_buf}
+
+        h = L.rms_norm(h, params["out_scale"])
+        h = h * jax.nn.silu(z)
+        out = h @ params["w_down"].astype(dt)
+        return shard(x + out, "batch", "res_seq", "dmodel"), new_cache if mode != "train" else None
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block)
+# ---------------------------------------------------------------------------
+
+
+class SLSTMLayer:
+    """Pre-norm sLSTM with per-head block-diagonal recurrence + gated FFN
+    (pf=4/3).  The time recurrence is inherently sequential (lax.scan)."""
+
+    @staticmethod
+    def _dims(cfg):
+        D = cfg.d_model
+        H = cfg.n_heads
+        f = int(round(D * 4 / 3 / 32)) * 32
+        return D, H, D // H, f
+
+    @staticmethod
+    def init(cfg, key):
+        D, H, hd, f = SLSTMLayer._dims(cfg)
+        ks = jax.random.split(key, 6)
+        return {
+            "norm": L.norm_init(cfg, ks[0]),
+            "w_gates": L.dense_init(ks[1], (D, 4 * D)),
+            "r_gates": L.dense_init(ks[2], (4, H, hd, hd), in_axis=2),
+            "b_gates": jnp.zeros((4 * D,), L.pdtype(cfg)),
+            "w_up": L.dense_init(ks[3], (D, 2 * f)),
+            "w_down": L.dense_init(ks[4], (f, D)),
+            "out_scale": jnp.ones((D,), L.pdtype(cfg)),
+        }
+
+    @staticmethod
+    def spec(cfg):
+        return {
+            "norm": L.norm_spec(cfg),
+            "w_gates": P("fsdp", None),
+            "r_gates": P(None, "heads", None, None),
+            "b_gates": P(None),
+            "w_up": P("fsdp", "ff"),
+            "w_down": P("ff", "fsdp"),
+            "out_scale": P(None),
+        }
+
+    @staticmethod
+    def init_cache(cfg, batch, max_len):
+        D = cfg.d_model
+        z = jnp.zeros((batch, D), jnp.float32)
+        return {"c": z, "h": z, "n": z}
+
+    @staticmethod
+    def cache_spec(cfg):
+        s = P("batch", None)
+        return {"c": s, "h": s, "n": s}
+
+    @staticmethod
+    def _step(cfg, params, pre_t, state):
+        """pre_t: (B,4D) fp32 input preactivations; state: dict of (B,D)."""
+        D, H, hd, _ = SLSTMLayer._dims(cfg)
+        B = pre_t.shape[0]
+        h_prev = state["h"].reshape(B, H, hd)
+        rec = jnp.einsum(
+            "bhd,ghde->gbhe", h_prev, params["r_gates"].astype(jnp.float32)
+        ).reshape(4, B, D)
+        g = pre_t.reshape(B, 4, D).swapaxes(0, 1) + rec + params["b_gates"].astype(
+            jnp.float32
+        ).reshape(4, 1, D)
+        z = jnp.tanh(g[0])
+        i = jax.nn.sigmoid(g[1])
+        f = jax.nn.sigmoid(g[2])
+        o = jax.nn.sigmoid(g[3])
+        c = f * state["c"] + i * z
+        n = f * state["n"] + i
+        h = o * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "h": h, "n": n}
+
+    @staticmethod
+    def apply(cfg, params, x, *, mode, cache=None, pos=None, probe=False,
+              extras=None):
+        D, H, hd, f = SLSTMLayer._dims(cfg)
+        dt = x.dtype
+        B = x.shape[0]
+        hin = L.norm_apply(cfg, params["norm"], x)
+        pre = (hin @ params["w_gates"].astype(dt)).astype(jnp.float32)
+
+        if mode == "decode":
+            state = SLSTMLayer._step(cfg, params, pre[:, 0], cache)
+            h_seq = state["h"][:, None].astype(dt)
+            new_cache = state
+        else:
+            state0 = SLSTMLayer.init_cache(cfg, B, 0)
+
+            def body(st, pre_t):
+                st = SLSTMLayer._step(cfg, params, pre_t, st)
+                return st, st["h"]
+
+            state, hs = jax.lax.scan(body, state0, pre.swapaxes(0, 1))
+            h_seq = hs.swapaxes(0, 1).astype(dt)  # (B,S,D)
+            new_cache = state if mode == "prefill" else None
+
+        h_seq = L.rms_norm(h_seq, params["out_scale"])
+        up = h_seq @ params["w_up"].astype(dt)
+        gate, val = up[..., :f], up[..., f:]
+        out = (jax.nn.gelu(gate) * val) @ params["w_down"].astype(dt)
+        return shard(x + out, "batch", "res_seq", "dmodel"), new_cache
+
+    @staticmethod
+    def recurrent_flops(cfg, batch: int, seq: int) -> float:
+        """Analytic FLOPs of the sequential recurrence (counted once by
+        XLA inside the while loop) — added as a roofline correction."""
+        D, H, hd, _ = SLSTMLayer._dims(cfg)
+        per_step = 4 * H * hd * hd * 2 * batch  # block-diag recurrent matvec
+        elementwise = 12 * D * batch
+        return seq * (per_step + elementwise)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+
+class RGLRULayer:
+    """Pre-norm Griffin recurrent block (conv + RG-LRU, gated) + GeGLU MLP."""
+
+    C_FACTOR = 8.0
+
+    @staticmethod
+    def init(cfg, key):
+        D = cfg.d_model
+        ks = jax.random.split(key, 8)
+        return {
+            "norm1": L.norm_init(cfg, ks[0]),
+            "w_x": L.dense_init(ks[1], (D, D)),
+            "w_g": L.dense_init(ks[2], (D, D)),
+            "conv": L.dense_init(ks[3], (cfg.conv_width, D)),
+            "w_r": L.dense_init(ks[4], (D, D)),
+            "w_i": L.dense_init(ks[5], (D, D)),
+            "lam": jnp.full((D,), 2.0, L.pdtype(cfg)),  # softplus ≈ 2.1
+            "w_o": L.dense_init(ks[6], (D, D)),
+            "norm2": L.norm_init(cfg, ks[7]),
+            "mlp": L.mlp_init(cfg, jax.random.fold_in(key, 99)),
+        }
+
+    @staticmethod
+    def spec(cfg):
+        return {
+            "norm1": L.norm_spec(cfg),
+            "w_x": P("fsdp", "ff"),
+            "w_g": P("fsdp", "ff"),
+            "conv": P(None, "ff"),
+            "w_r": P("fsdp", "ff"),
+            "w_i": P("fsdp", "ff"),
+            "lam": P("ff"),
+            "w_o": P("ff", "fsdp"),
+            "norm2": L.norm_spec(cfg),
+            "mlp": L.mlp_spec(cfg),
+        }
+
+    @staticmethod
+    def init_cache(cfg, batch, max_len):
+        D = cfg.d_model
+        return {
+            "h": jnp.zeros((batch, D), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, D), L.cdtype(cfg)),
+        }
+
+    @staticmethod
+    def cache_spec(cfg):
+        return {"h": P("batch", "ff"), "conv": P("batch", None, "ff")}
+
+    @staticmethod
+    def apply(cfg, params, x, *, mode, cache=None, pos=None, probe=False,
+              extras=None):
+        D = cfg.d_model
+        dt = x.dtype
+        hin = L.norm_apply(cfg, params["norm1"], x)
+        xb = hin @ params["w_x"].astype(dt)
+        gate = jax.nn.gelu(hin @ params["w_g"].astype(dt))
+        conv_buf = cache["conv"] if (cache is not None and mode == "decode") else None
+        u, new_buf = _causal_conv(xb, params["conv"], conv_buf)
+        u = shard(u, "batch", "seq", "ff")
+        r = jax.nn.sigmoid((u @ params["w_r"].astype(dt)).astype(jnp.float32))
+        i = jax.nn.sigmoid((u @ params["w_i"].astype(dt)).astype(jnp.float32))
+        log_a = -RGLRULayer.C_FACTOR * jax.nn.softplus(
+            params["lam"].astype(jnp.float32)
+        ) * r  # (B,S,D)
+        a = jnp.exp(log_a)
+        b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+            i * u.astype(jnp.float32)
+        )
+        if mode == "decode":
+            h_new = a[:, 0] * cache["h"] + b[:, 0]  # (B,D)
+            hs = h_new[:, None]
+            new_cache = {"h": h_new, "conv": new_buf}
+        else:
+            a_t = a.swapaxes(0, 1)  # (S,B,D)
+            b_t = b.swapaxes(0, 1)
+            _, hs_t = _linear_scan(a_t, b_t)
+            hs = hs_t.swapaxes(0, 1)  # (B,S,D)
+            new_cache = (
+                {"h": hs[:, -1], "conv": new_buf} if mode == "prefill" else None
+            )
+        mix = (hs.astype(dt) * gate) @ params["w_o"].astype(dt)
+        x = shard(x + mix, "batch", "res_seq", "dmodel")
+        h2 = L.norm_apply(cfg, params["norm2"], x)
+        x = x + L.mlp_apply(cfg, params["mlp"], h2)
+        return shard(x, "batch", "res_seq", "dmodel"), new_cache

@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from .schedule import cosine_schedule
+from .compression import compress_grads, decompress_grads, CompressionState
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "opt_state_specs",
+    "cosine_schedule", "compress_grads", "decompress_grads", "CompressionState",
+]

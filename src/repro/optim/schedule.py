@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule"]
+
+
+def cosine_schedule(step, *, warmup: int = 100, total: int = 10_000,
+                    min_ratio: float = 0.1):
+    """Linear warmup → cosine decay to min_ratio. Returns an lr *scale*."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos

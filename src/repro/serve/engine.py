@@ -1,0 +1,171 @@
+"""Batched serving engine on the RIMMS paged KV pool.
+
+The production mapping of the paper (DESIGN.md §2): the KV cache is one
+preallocated device pool; the RIMMS marking systems hand out page
+extents; a sequence's pages are one ``fragment()``-style grab; block
+tables are the resource pointers consumed by the paged-attention kernel
+(ref path on CPU, Pallas kernel on TPU).
+
+Continuous-batching-lite: up to ``max_batch`` slots decode in lock-step;
+finished sequences free their pages back to the pool and new requests
+are admitted into the freed slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.paged_kv import PagedKVPool, init_pool_arrays, write_token
+from repro.kernels.paged_attention import ref as pa_ref
+from repro.models import layers as L
+from repro.models.model_api import Model, build_model
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
+                 page_size: int = 16, num_pages: int = 512,
+                 max_pages_per_seq: int = 32, allocator: str = "bitset",
+                 eos_id: Optional[int] = None):
+        assert cfg.family in ("dense", "vlm"), (
+            "engine supports full-attention dense decoder families"
+        )
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_pages = max_pages_per_seq
+        self.max_batch = max_batch
+        self.eos_id = eos_id
+        self.pool = PagedKVPool(num_pages=num_pages, page_size=page_size,
+                                allocator=allocator)
+        # page 0 is a sacrificial scratch page: inactive slots' block
+        # tables point at it, so their masked writes never corrupt a
+        # live sequence's pages.
+        self.pool.alloc_sequence(-1, 1)
+        n_layers = cfg.n_layers
+        kv, hd = cfg.n_kv_heads, cfg.head_dim_
+        k0, v0 = init_pool_arrays(num_pages, page_size, kv, hd, L.cdtype(cfg))
+        self.k_pools = jnp.broadcast_to(k0, (n_layers,) + k0.shape).copy()
+        self.v_pools = jnp.broadcast_to(v0, (n_layers,) + v0.shape).copy()
+        # slot state (host side — RIMMS metadata lives on host, §3.2.2)
+        self.block_tables = np.zeros((max_batch, max_pages_per_seq), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros((max_batch,), np.int32)
+        self.slot_tok = np.zeros((max_batch,), np.int32)
+        self._next_rid = 0
+        self.waiting: List[Request] = []
+        self._step_fn = jax.jit(functools.partial(_paged_decode_step, cfg))
+
+    # -- request admission --------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> Request:
+        req = Request(self._next_rid, list(prompt), max_new_tokens)
+        self._next_rid += 1
+        self.waiting.append(req)
+        return req
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting.pop(0)
+            n_tokens = len(req.prompt) + req.max_new_tokens
+            table = self.pool.alloc_sequence(req.rid, n_tokens)
+            assert len(table) <= self.max_pages, "request exceeds max_pages"
+            self.block_tables[slot, :] = 0
+            self.block_tables[slot, : len(table)] = table
+            self.slot_req[slot] = req
+            # prefill by teacher-forced decode over the prompt
+            for i, tok in enumerate(req.prompt[:-1]):
+                self._decode_one(slot, tok, i)
+            self.slot_pos[slot] = len(req.prompt) - 1
+            self.slot_tok[slot] = req.prompt[-1]
+
+    def _decode_one(self, slot: int, token: int, pos: int) -> int:
+        toks = self.slot_tok.copy()
+        poss = self.slot_pos.copy()
+        toks[slot], poss[slot] = token, pos
+        nxt = self._step(toks, poss, active_mask=np.eye(1, self.max_batch,
+                                                        slot, dtype=bool)[0])
+        return int(nxt[slot])
+
+    # -- decode ----------------------------------------------------------------
+    def _step(self, tokens: np.ndarray, pos: np.ndarray, active_mask) -> np.ndarray:
+        lengths = jnp.asarray(np.where(active_mask, pos + 1, 0), jnp.int32)
+        nxt, self.k_pools, self.v_pools = self._step_fn(
+            self.params, self.k_pools, self.v_pools,
+            jnp.asarray(self.block_tables), jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32), lengths,
+        )
+        return np.asarray(nxt)
+
+    def step(self) -> int:
+        """One lock-step decode over all active slots; returns #active."""
+        self._admit()
+        active = np.array([r is not None for r in self.slot_req])
+        if not active.any():
+            return 0
+        nxt = self._step(self.slot_tok, self.slot_pos, active)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self.slot_pos[slot] += 1
+            self.slot_tok[slot] = tok
+            if len(req.generated) >= req.max_new_tokens or tok == self.eos_id:
+                req.done = True
+                self.pool.free_sequence(req.rid)
+                self.slot_req[slot] = None
+        return int(active.sum())
+
+    def run(self, max_steps: int = 1000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.waiting:
+                break
+
+
+def _paged_decode_step(cfg, params, k_pools, v_pools, block_tables,
+                       tokens, pos, lengths):
+    """One batched paged decode step for dense-family configs."""
+    x = L.embed_tokens(cfg, params["embed"], tokens[:, None],
+                       pos[:, None] if cfg.pos_embed == "learned" else None)
+    stack = params["stacks"][0]
+    n_layers = jax.tree.leaves(stack)[0].shape[0]
+    dims = L.attn_dims(cfg)
+    new_k, new_v = [], []
+    for li in range(n_layers):
+        p = jax.tree.map(lambda a: a[li], stack)["b0"]
+        h = L.norm_apply(cfg, p["norm1"], x)
+        q, k, v = L._project_qkv(cfg, p["attn"], h, pos[:, None])
+        kp = write_token(k_pools[li], block_tables, pos, k[:, 0])
+        vp = write_token(v_pools[li], block_tables, pos, v[:, 0])
+        new_k.append(kp)
+        new_v.append(vp)
+        attn = pa_ref.paged_attention(
+            q[:, 0].reshape(q.shape[0], dims.n_q, dims.head_dim),
+            kp, vp, block_tables, lengths,
+        ).reshape(x.shape[0], 1, dims.n_q * dims.head_dim)
+        x = x + attn @ p["attn"]["wo"].astype(x.dtype)
+        h = L.norm_apply(cfg, p["norm2"], x)
+        x = x + L.mlp_apply(cfg, p["mlp"], h)
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    return nxt, jnp.stack(new_k), jnp.stack(new_v)

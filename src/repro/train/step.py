@@ -1,0 +1,82 @@
+"""Train / serve step builders (pure functions suitable for pjit)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import Model
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["build_train_step", "build_serve_step", "build_prefill_step"]
+
+
+def build_train_step(model: Model, opt_cfg: AdamWConfig = AdamWConfig(),
+                     *, remat: bool = True, probe: bool = False,
+                     microbatches: int = 1):
+    """fwd+bwd+AdamW.  ``microbatches > 1`` = gradient accumulation over a
+    ``lax.scan``: the dominant activation-memory term (per-layer scan
+    carries) shrinks by the microbatch factor while per-step collective
+    and FLOP totals are unchanged (same tokens per step).  Probes compile
+    with ``microbatches=1`` — identical per-step cost totals."""
+
+    def loss_fn(p, b):
+        return model.loss(p, b, probe=probe, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            k = microbatches
+            mb = jax.tree.map(
+                lambda a: a.reshape(k, a.shape[0] // k, *a.shape[1:]), batch
+            )
+
+            def body(acc, b):
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                acc = (
+                    acc[0] + l,
+                    jax.tree.map(lambda s, x: s + x.astype(jnp.float32),
+                                 acc[1], g),
+                )
+                return acc, None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss_sum, gsum), _ = jax.lax.scan(body, (0.0, zeros), mb)
+            loss = loss_sum / k
+            grads = jax.tree.map(lambda g: g / k, gsum)
+
+        # schedule is evaluated at the step being taken (1-based): warmup
+        # must not zero out the very first update.
+        lr_scale = cosine_schedule(opt_state["step"] + 1)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, opt_state, params, lr_scale
+        )
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_serve_step(model: Model):
+    """One decode step: greedy next token + updated caches."""
+
+    def serve_step(params, caches, token, pos):
+        logits, caches = model.decode_step(params, caches, token, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return serve_step
+
+
+def build_prefill_step(model: Model, max_len: int, *, probe: bool = False):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len, probe=probe)
+
+    return prefill_step

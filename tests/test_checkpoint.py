@@ -1,0 +1,64 @@
+"""Checkpoint format: atomicity, retention, roundtrip, elastic restore."""
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((4,))},
+        "opt": {"m": jnp.zeros((3, 4)), "step": jnp.asarray(5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(tmp_path, 7, t, extra={"note": "x"})
+    restored, step, extra = restore_checkpoint(tmp_path, t)
+    assert step == 7 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_ignores_partial_tmp(tmp_path):
+    t = tree()
+    save_checkpoint(tmp_path, 1, t)
+    # simulate a crash mid-write of step 2
+    broken = tmp_path / "step_00000002.tmp"
+    (broken / "arrays").mkdir(parents=True)
+    assert latest_step(tmp_path) == 1
+    restored, step, _ = restore_checkpoint(tmp_path, t)
+    assert step == 1
+    # next save garbage-collects the stale tmp
+    save_checkpoint(tmp_path, 3, t)
+    assert not broken.exists()
+
+
+def test_retention(tmp_path):
+    t = tree()
+    for s in range(1, 6):
+        save_checkpoint(tmp_path, s, t, keep=2)
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert kept == ["step_00000004", "step_00000005"]
+
+
+def test_elastic_restore_onto_mesh(tmp_path):
+    """Checkpoints store global logical arrays → restore onto any mesh."""
+    t = tree()
+    save_checkpoint(tmp_path, 2, t)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    restored, step, _ = restore_checkpoint(tmp_path, t, shardings=sh)
+    assert step == 2
+    w = restored["params"]["w"]
+    assert w.sharding == NamedSharding(mesh, P())

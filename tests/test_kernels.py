@@ -1,0 +1,184 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU; same code targets TPU v5e)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(42)
+
+
+def crandn(*shape):
+    return (rng.normal(size=shape) + 1j * rng.normal(size=shape)).astype(
+        np.complex64
+    )
+
+
+# ---------------------------------------------------------------- zip ----
+@pytest.mark.parametrize("shape", [(64,), (3, 300), (2, 5, 129)])
+def test_zip_kernel(shape):
+    from repro.kernels.zip import ops, ref
+
+    a, b = crandn(*shape), crandn(*shape)
+    np.testing.assert_allclose(
+        ops.zip_mul(a, b), ref.zip_mul(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------- fft ----
+@pytest.mark.parametrize("n", [2, 8, 64, 256, 1024, 2048, 8192])
+def test_fft_kernel_sizes(n):
+    from repro.kernels.fft import ops, ref
+
+    x = crandn(4, n)
+    tol = 3e-3 if n >= 2048 else 5e-4
+    np.testing.assert_allclose(ops.fft(x), ref.fft(x), rtol=tol, atol=tol * n ** 0.5)
+
+
+def test_ifft_roundtrip():
+    from repro.kernels.fft import ops
+
+    x = crandn(8, 512)
+    np.testing.assert_allclose(
+        ops.fft(ops.fft(x), forward=False), x, atol=1e-3
+    )
+
+
+def test_fft_batch_padding():
+    from repro.kernels.fft import ops, ref
+
+    x = crandn(3, 128)  # rows not a multiple of BLOCK_ROWS
+    np.testing.assert_allclose(ops.fft(x), ref.fft(x), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------ flash attention ----
+@pytest.mark.parametrize(
+    "B,S,Hq,Hkv,d,bq,bk,dtype",
+    [
+        (2, 256, 4, 2, 64, 128, 128, jnp.float32),
+        (1, 512, 2, 1, 128, 128, 256, jnp.float32),
+        (2, 128, 4, 4, 64, 64, 64, jnp.bfloat16),
+        (1, 384, 2, 2, 64, 128, 128, jnp.float32),  # ragged block count
+    ],
+)
+def test_flash_attention_sweep(B, S, Hq, Hkv, d, bq, bk, dtype):
+    from repro.kernels.flash_attention import ops, ref
+
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, d)), dtype)
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    kr = jnp.repeat(k, Hq // Hkv, axis=2)
+    vr = jnp.repeat(v, Hq // Hkv, axis=2)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * Hq, S, d)
+
+    want = ref.attention(to_bh(q), to_bh(kr), to_bh(vr)).reshape(
+        B, Hq, S, d
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_non_causal():
+    from repro.kernels.flash_attention import ops, ref
+
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(2, 128, 64)
+    want = ref.attention(to_bh(q), to_bh(k), to_bh(v), causal=False)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want.reshape(1, 2, 128, 64).transpose(0, 2, 1, 3)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+# ------------------------------------------------------ paged attention ----
+@pytest.mark.parametrize(
+    "B,hq,hkv,d,P,page,npg",
+    [(2, 4, 4, 64, 16, 8, 4), (4, 8, 2, 64, 32, 16, 6), (1, 2, 1, 128, 8, 4, 2)],
+)
+def test_paged_attention_sweep(B, hq, hkv, d, P, page, npg):
+    from repro.kernels.paged_attention import ops, ref
+
+    q = jnp.asarray(rng.normal(size=(B, hq, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, hkv, d)), jnp.float32)
+    bt = jnp.asarray(
+        np.stack([rng.choice(P, npg, replace=False) for _ in range(B)])
+        .astype(np.int32)
+    )
+    ln = jnp.asarray(rng.integers(1, npg * page + 1, size=(B,)).astype(np.int32))
+    got = ops.paged_attention(q, kp, vp, bt, ln)
+    want = ref.paged_attention(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------- rg_lru ----
+@pytest.mark.parametrize("B,S,D", [(2, 32, 128), (3, 64, 200), (1, 128, 256)])
+def test_rg_lru_sweep(B, S, D):
+    from repro.kernels.rg_lru import ops, ref
+
+    a = jnp.asarray(rng.uniform(0.3, 0.999, size=(B, S, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    hs, hN = ops.rg_lru_scan(a, b, h0)
+    ws, wN = ref.rg_lru_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(ws), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hN), np.asarray(wN), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_rg_lru_matches_sequential_loop():
+    from repro.kernels.rg_lru import ops
+
+    B, S, D = 1, 16, 128
+    a = jnp.asarray(rng.uniform(0.5, 0.9, size=(B, S, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    h0 = jnp.zeros((B, D), jnp.float32)
+    hs, _ = ops.rg_lru_scan(a, b, h0)
+    h = np.zeros((B, D), np.float32)
+    for t in range(S):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        np.testing.assert_allclose(np.asarray(hs[:, t]), h, rtol=1e-5,
+                                   atol=1e-5)
+
+
+# --------------------------------------------------------------- mlstm ----
+@pytest.mark.parametrize("B,S,H,m,chunk", [(2, 64, 2, 128, 16),
+                                           (1, 32, 4, 64, 8),
+                                           (1, 128, 1, 128, 64)])
+def test_mlstm_chunkwise_sweep(B, S, H, m, chunk):
+    import math
+
+    from repro.kernels.mlstm import ops, ref
+
+    q = jnp.asarray(rng.normal(size=(B, S, H, m)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, m)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, S, H, m)), jnp.float32)
+    ig = jnp.asarray(rng.uniform(0.1, 0.9, size=(B, S, H)), jnp.float32)
+    lf = jnp.asarray(np.log(rng.uniform(0.5, 0.95, size=(B, S, H))),
+                     jnp.float32)
+    got = ops.mlstm_chunkwise(q, k, v, ig, lf, chunk=chunk)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, m)
+
+    def g_bh(x):
+        return x.transpose(0, 2, 1).reshape(B * H, S)
+
+    want = ref.mlstm_sequential(
+        to_bh(q / math.sqrt(m)), to_bh(k), to_bh(v), g_bh(ig), g_bh(lf)
+    ).reshape(B, H, S, m).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)

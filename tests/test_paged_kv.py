@@ -1,0 +1,57 @@
+"""Paged KV pool: RIMMS allocators managing serving memory."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocator import AllocError
+from repro.core.paged_kv import PagedKVPool, gather_kv, init_pool_arrays, write_token
+
+
+def test_alloc_extend_free_cycle():
+    pool = PagedKVPool(num_pages=32, page_size=8)
+    t = pool.alloc_sequence(0, 20)  # 3 pages
+    assert len(t) == 3 and pool.free_pages == 29
+    t2 = pool.extend_sequence(0, 20)  # 40 tokens → 5 pages
+    assert len(t2) == 5
+    pool.free_sequence(0)
+    assert pool.free_pages == 32
+
+
+def test_fragment_fast_path_vs_fallback():
+    pool = PagedKVPool(num_pages=6, page_size=4, allocator="nextfit")
+    a = pool.alloc_sequence(0, 8)   # pages 0-1
+    b = pool.alloc_sequence(1, 8)   # pages 2-3
+    c = pool.alloc_sequence(2, 8)   # pages 4-5
+    pool.free_sequence(0)
+    pool.free_sequence(2)
+    assert pool.fragment_allocs == 3
+    # 4 free pages but split 2+2 — no contiguous run of 3 exists
+    d = pool.alloc_sequence(3, 12)
+    assert pool.fallback_allocs == 1
+    assert len(d) == 3
+
+
+def test_pool_exhaustion_rolls_back():
+    pool = PagedKVPool(num_pages=4, page_size=4)
+    pool.alloc_sequence(0, 8)
+    with pytest.raises(AllocError):
+        pool.alloc_sequence(1, 16)
+    # partial grabs must have been rolled back
+    assert pool.free_pages == 2
+
+
+def test_write_and_gather_roundtrip():
+    pool = PagedKVPool(num_pages=16, page_size=4)
+    table = pool.alloc_sequence(7, 16)
+    bt = np.zeros((1, 4), np.int32)
+    bt[0, : len(table)] = table
+    k, _ = init_pool_arrays(16, 4, 2, 8, jnp.float32)
+    vals = []
+    for pos in range(10):
+        new = jnp.full((1, 2, 8), float(pos + 1))
+        k = write_token(k, jnp.asarray(bt), jnp.asarray([pos]), new)
+        vals.append(pos + 1.0)
+    dense = gather_kv(k, jnp.asarray(bt), 16)
+    got = np.asarray(dense[0, :10, 0, 0])
+    np.testing.assert_allclose(got, vals)

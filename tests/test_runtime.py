@@ -1,0 +1,103 @@
+"""Runtime dispatch + memory policies: the paper's copy-count claims."""
+
+import numpy as np
+import pytest
+
+from repro.apps.radar import (
+    build_2fft,
+    build_2fzf,
+    build_3zip,
+    build_pd,
+    make_runtime,
+)
+from repro.core.hete import hete_sync
+
+
+def run_chain(builder, policy, pins_key="pins", **kw):
+    rt, ctx = make_runtime(policy=policy, accelerators=("gpu0",))
+    bufs, tasks = builder(ctx, **kw)
+    rt.run(tasks)
+    return rt, ctx, bufs
+
+
+def test_2fft_copy_elimination_acc_acc():
+    """Paper Fig 5: ACC-ACC — reference 4 copies, RIMMS 1 (−3)."""
+    _, ctx_ref, _ = run_chain(
+        lambda c: build_2fft(c, 256, pins=("gpu0", "gpu0")), "reference")
+    _, ctx_rim, _ = run_chain(
+        lambda c: build_2fft(c, 256, pins=("gpu0", "gpu0")), "rimms")
+    assert ctx_ref.ledger.total_copies == 4
+    assert ctx_rim.ledger.total_copies == 1
+
+
+def test_2fft_copy_elimination_cpu_acc():
+    """Paper Fig 5: CPU-ACC — RIMMS saves exactly one copy."""
+    _, ctx_ref, _ = run_chain(
+        lambda c: build_2fft(c, 256, pins=("cpu0", "gpu0")), "reference")
+    _, ctx_rim, _ = run_chain(
+        lambda c: build_2fft(c, 256, pins=("cpu0", "gpu0")), "rimms")
+    assert ctx_ref.ledger.total_copies - ctx_rim.ledger.total_copies == 1
+
+
+def test_2fft_results_match_and_correct():
+    outs = {}
+    for policy in ("reference", "rimms"):
+        _, ctx, bufs = run_chain(
+            lambda c: build_2fft(c, 128, pins=("gpu0", "gpu0"), seed=3), policy)
+        outs[policy] = hete_sync(bufs["out"], context=ctx).copy()
+        np.testing.assert_allclose(
+            outs[policy], bufs["in"].data, atol=1e-4
+        )  # IFFT(FFT(x)) == x
+    np.testing.assert_allclose(outs["reference"], outs["rimms"], atol=1e-5)
+
+
+def test_2fzf_numerics_vs_numpy():
+    _, ctx, bufs = run_chain(
+        lambda c: build_2fzf(c, 64, pins=("gpu0",) * 4, seed=1), "rimms")
+    want = np.fft.ifft(np.fft.fft(bufs["a"].data) * np.fft.fft(bufs["b"].data))
+    np.testing.assert_allclose(
+        hete_sync(bufs["out"], context=ctx), want.astype(np.complex64),
+        atol=1e-4,
+    )
+
+
+def test_3zip_gpu_only_counts():
+    """Fig 8 flow: reference bounces every hop (6 in-copies + 3 out),
+    RIMMS stages inputs once and keeps intermediates on device."""
+    _, ctx_ref, _ = run_chain(
+        lambda c: build_3zip(c, 128, pins=("gpu0",) * 3), "reference")
+    _, ctx_rim, _ = run_chain(
+        lambda c: build_3zip(c, 128, pins=("gpu0",) * 3), "rimms")
+    assert ctx_ref.ledger.total_copies == 9
+    assert ctx_rim.ledger.total_copies == 4  # four fresh inputs only
+
+
+def test_round_robin_batches_of_four():
+    """Paper §5.4: 3 CPUs + 1 GPU round robin."""
+    rt, ctx = make_runtime(policy="rimms", n_cpu=3, accelerators=("gpu0",))
+    bufs, tasks = build_pd(ctx, ways=8, n=64)
+    rt.run(tasks)
+    fft_pes = [pe for name, pe in rt.task_log if name.startswith("fft")]
+    assert fft_pes[:4] == ["cpu0", "cpu1", "cpu2", "gpu0"]
+
+
+def test_data_affinity_scheduler_prefers_data_location():
+    rt, ctx = make_runtime(policy="rimms", n_cpu=1,
+                           accelerators=("gpu0",), scheduler="data_affinity")
+    bufs, tasks = build_2fft(ctx, 128)
+    rt.run(tasks)
+    # second task should follow the data produced by the first
+    assert rt.task_log[0][1] == rt.task_log[1][1]
+
+
+def test_pd_fragment_allocation_counts():
+    """§3.2.3: with fragment(), one arena search per data point."""
+    rt, ctx = make_runtime(policy="rimms", accelerators=("gpu0",))
+    arena = list(ctx.spaces.values())[-1].arena
+    build_pd(ctx, ways=16, n=64, use_fragment=True)
+    n_frag = arena.n_allocs
+    rt2, ctx2 = make_runtime(policy="rimms", accelerators=("gpu0",))
+    build_pd(ctx2, ways=16, n=64, use_fragment=False)
+    # fragment path does ≤ 1 alloc per data point (host-side arenas are
+    # only engaged when spaces are passed; here we compare host mallocs)
+    assert n_frag <= arena.n_allocs

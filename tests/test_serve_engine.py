@@ -1,0 +1,80 @@
+"""Serving engine: paged decode must match the dense-cache decode path;
+pool pages recycle across requests (continuous batching)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("llama3_8b").smoke(), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    return cfg, model, params
+
+
+def dense_greedy(model, params, prompt, n_new):
+    """Reference generation through the dense-cache decode path."""
+    B = 1
+    toks = list(prompt)
+    caches = model.init_cache(B, 128)
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray([toks], jnp.int32)}, max_len=128
+    )
+    out = []
+    pos = len(toks)
+    tok = int(jnp.argmax(logits[0]))
+    for _ in range(n_new):
+        out.append(tok)
+        logits, caches = model.decode_step(
+            params, caches, jnp.asarray([tok], jnp.int32),
+            jnp.asarray([pos], jnp.int32),
+        )
+        tok = int(jnp.argmax(logits[0]))
+        pos += 1
+    return out
+
+
+def test_engine_matches_dense_path(setup):
+    cfg, model, params = setup
+    prompt = [5, 9, 2, 7]
+    n_new = 6
+    want = dense_greedy(model, params, prompt, n_new)
+    eng = ServeEngine(cfg, params, max_batch=2, page_size=8, num_pages=64,
+                      max_pages_per_seq=16)
+    req = eng.submit(prompt, max_new_tokens=n_new)
+    eng.run()
+    assert req.done
+    assert req.generated == want
+
+
+def test_engine_batched_requests_and_page_recycling(setup):
+    cfg, model, params = setup
+    eng = ServeEngine(cfg, params, max_batch=2, page_size=8, num_pages=32,
+                      max_pages_per_seq=8)
+    free0 = eng.pool.free_pages
+    reqs = [eng.submit([i + 1, i + 2, i + 3], max_new_tokens=4)
+            for i in range(5)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) == 4 for r in reqs)
+    assert eng.pool.free_pages == free0  # all pages returned
+    # each request individually matches the dense path
+    for r in reqs[:2]:
+        want = dense_greedy(model, params, r.prompt, 4)
+        assert r.generated == want
+
+
+def test_engine_rejects_recurrent_families(setup):
+    cfg, model, params = setup
+    bad = dataclasses.replace(cfg, family="ssm")
+    with pytest.raises(AssertionError):
+        ServeEngine(bad, params)

@@ -1,0 +1,61 @@
+"""Logical-axis rules, divisibility guards, spec resolution."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    MULTI_POD_RULES,
+    SINGLE_POD_RULES,
+    AxisRules,
+    resolve_spec,
+    resolve_spec_tree,
+    use_rules,
+)
+
+
+def mesh_1x1():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_spec_resolution_basic():
+    rules = AxisRules(dict(SINGLE_POD_RULES), mesh=None)
+    assert rules.spec("batch", None, "heads") == P(("data",), None, ("model",))
+
+
+def test_divisibility_guard_replicates():
+    mesh = mesh_1x1()
+    rules = AxisRules(dict(SINGLE_POD_RULES), mesh=mesh)
+    # fake a 16-wide axis by checking the arithmetic path directly
+    rules16 = AxisRules(dict(SINGLE_POD_RULES), mesh=mesh)
+    rules16.mesh_size = lambda axes: 16
+    assert rules16.entry("heads", 40) is None  # 40 % 16 != 0 → replicate
+    assert rules16.entry("heads", 32) is not None
+    assert ("heads", 40, ("model",)) in rules16.dropped
+
+
+def test_multi_pod_batch_axes():
+    rules = AxisRules(dict(MULTI_POD_RULES), mesh=None)
+    assert rules.axes_for("batch") == ("pod", "data")
+
+
+def test_resolve_spec_with_dims():
+    mesh = mesh_1x1()
+    rules = AxisRules(dict(SINGLE_POD_RULES), mesh=mesh)
+    p = resolve_spec(P("batch", "vocab"), rules, (8, 100))
+    assert p == P("data", "model")
+
+
+def test_unknown_logical_axis_raises():
+    rules = AxisRules(dict(SINGLE_POD_RULES), mesh=None)
+    with pytest.raises(KeyError):
+        rules.axes_for("bogus")
+
+
+def test_shard_noop_without_mesh():
+    import jax.numpy as jnp
+    from repro.distributed.sharding import shard
+
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", None) is x

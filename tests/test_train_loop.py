@@ -1,0 +1,97 @@
+"""Training-loop fault tolerance: checkpoint/restart determinism,
+preemption safety, straggler detection, pipeline resume."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.train.loop import Trainer, TrainerConfig
+
+CFG = get_config("llama3_8b").smoke()
+
+
+def make_trainer(tmp_path, steps=6, ckpt_every=3, seed=0):
+    t = Trainer(
+        CFG, batch_size=2, seq_len=16,
+        tcfg=TrainerConfig(steps=steps, ckpt_every=ckpt_every,
+                           ckpt_dir=str(tmp_path / "ckpt"), log_every=1,
+                           seed=seed),
+    )
+    return t
+
+
+def test_pipeline_deterministic_resume():
+    p = TokenPipeline(CFG, 2, 16, seed=7)
+    b0, b1 = next(p), next(p)
+    q = TokenPipeline(CFG, 2, 16, seed=7)
+    q.restore(p.state())  # state points at batch 2
+    next(p)
+    # a fresh pipeline restored from state produces the same stream
+    r = TokenPipeline(CFG, 2, 16, seed=7)
+    np.testing.assert_array_equal(r.batch_at(0)["tokens"], b0["tokens"])
+    np.testing.assert_array_equal(r.batch_at(1)["tokens"], b1["tokens"])
+
+
+def test_train_runs_and_logs(tmp_path):
+    t = make_trainer(tmp_path, steps=4, ckpt_every=10)
+    report = t.run()
+    assert report["final_step"] == 4
+    losses = [m["loss"] for m in report["metrics"]]
+    assert all(np.isfinite(l) for l in losses)
+    # RIMMS ledger saw exactly one host→device ingest per batch leaf
+    assert report["transfers"]["total_copies"] == 4 * 2  # tokens+labels
+
+
+def test_checkpoint_restart_bitwise_resume(tmp_path):
+    # run 6 steps straight
+    t1 = make_trainer(tmp_path / "a", steps=6, ckpt_every=100)
+    r1 = t1.run()
+    # run 3 steps, "crash", restart a fresh trainer, run to 6
+    t2 = make_trainer(tmp_path / "b", steps=3, ckpt_every=3)
+    t2.run()
+    t3 = make_trainer(tmp_path / "b", steps=6, ckpt_every=3)
+    assert t3.maybe_restore()
+    assert t3.step == 3
+    r3 = t3.run()
+    l1 = [m for m in r1["metrics"] if m["step"] == 6][0]["loss"]
+    l3 = [m for m in r3["metrics"] if m["step"] == 6][0]["loss"]
+    np.testing.assert_allclose(l1, l3, rtol=1e-5)
+
+
+def test_preemption_checkpoints_and_exits(tmp_path):
+    t = make_trainer(tmp_path, steps=100, ckpt_every=1000)
+    orig = t.on_straggler
+    calls = []
+
+    def stop_after_two(step, dt, med):
+        calls.append(step)
+
+    t.on_straggler = stop_after_two
+    # preempt via the signal-handler flag after 2 steps
+    steps_done = []
+
+    real_stage = t._stage_batch
+
+    def staged(b):
+        if t.step >= 2:
+            t.request_preemption()
+        return real_stage(b)
+
+    t._stage_batch = staged
+    report = t.run()
+    assert report["preempted"]
+    assert report["final_step"] < 100
+    from repro.train.checkpoint import latest_step
+    assert latest_step(t.tcfg.ckpt_dir) == report["final_step"]
+
+
+def test_straggler_detection():
+    t = Trainer(CFG, 2, 16, tcfg=TrainerConfig(steps=8, ckpt_every=100,
+                                               ckpt_dir="/tmp/unused_ck",
+                                               straggler_factor=0.0))
+    # factor 0 → every step after the 5th is a "straggler"
+    report = t.run()
+    assert report["straggler_events"] > 0
