@@ -9,10 +9,12 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: 2fft,2fzf,alloc,overhead,3zip,apps,marking,roofline")
+                    help="comma list: 2fft,2fzf,alloc,overhead,3zip,apps,"
+                         "marking,roofline,graph")
     args = ap.parse_args()
     from . import (bench_2fft, bench_2fzf, bench_3zip, bench_alloc,
-                   bench_apps, bench_marking, bench_overhead, bench_roofline)
+                   bench_apps, bench_graph, bench_marking, bench_overhead,
+                   bench_roofline)
     benches = {
         "alloc": bench_alloc.run,
         "overhead": lambda: bench_overhead.run(n_calls=200_000),
@@ -22,6 +24,7 @@ def main() -> None:
         "apps": bench_apps.run,
         "marking": bench_marking.run,
         "roofline": bench_roofline.run,
+        "graph": bench_graph.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -26,7 +26,7 @@ from repro.core.runtime import PE, Runtime, Task, make_emulated_soc
 
 __all__ = [
     "register_kernels", "build_2fft", "build_2fzf", "build_3zip",
-    "build_rc", "build_pd", "build_sar", "make_runtime",
+    "build_rc", "build_pd", "build_sar", "make_runtime", "run_pipeline",
 ]
 
 C64 = np.complex64
@@ -65,6 +65,9 @@ def register_kernels(rt: Runtime) -> None:
 def make_runtime(*, policy: str, scheduler: str = "round_robin",
                  n_cpu: int = 1, accelerators: Sequence[str] = ("gpu0",),
                  allocator: str = "nextfit", tracking: str = "flag"):
+    """Build (Runtime, HeteContext) for an emulated SoC.  ``scheduler``
+    may be any of :data:`repro.core.runtime.SCHEDULERS`, including the
+    transfer-aware ``"heft"`` used by the graph executor."""
     pes, ctx = make_emulated_soc(
         n_cpu=n_cpu, accelerators=tuple(accelerators), allocator=allocator,
         tracking=tracking,
@@ -72,6 +75,18 @@ def make_runtime(*, policy: str, scheduler: str = "round_robin",
     rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler)
     register_kernels(rt)
     return rt, ctx
+
+
+def run_pipeline(rt: Runtime, tasks, *, mode: str = "serial",
+                 scheduler: Optional[str] = None) -> float:
+    """Execute a built task list either serially (CEDR-style submission
+    order) or on the async task-graph executor (automatic DAG, per-PE
+    queues, transfer/compute overlap).  Returns wall seconds."""
+    if mode == "serial":
+        return rt.run(tasks)
+    if mode == "graph":
+        return rt.run_graph(tasks, scheduler=scheduler)
+    raise ValueError(f"unknown execution mode {mode!r} (serial|graph)")
 
 
 def _fill(hd: HeteData, rng: np.random.Generator) -> None:

@@ -1,16 +1,19 @@
 """RIMMS core: allocators, hete_Data tracking, task runtime, KV page pool."""
 
 from .allocator import AllocError, BitsetAllocator, Extent, NextFitAllocator, make_allocator
+from .executor import GraphExecutor
+from .graph import CostModel, TaskGraph, TaskNode, build_graph
 from .hete import HeteContext, HeteData, default_context, hete_free, hete_malloc, hete_sync
-from .instrument import TransferLedger, Timer, ledger
+from .instrument import Timeline, TimelineEvent, TransferLedger, Timer, ledger
 from .locations import HOST, BandwidthModel, Location
 from .paged_kv import PagedKVPool, gather_kv, init_pool_arrays, write_token
 from .runtime import PE, Runtime, Task, make_emulated_soc
 
 __all__ = [
     "AllocError", "BitsetAllocator", "Extent", "NextFitAllocator", "make_allocator",
+    "GraphExecutor", "CostModel", "TaskGraph", "TaskNode", "build_graph",
     "HeteContext", "HeteData", "default_context", "hete_free", "hete_malloc", "hete_sync",
-    "TransferLedger", "Timer", "ledger",
+    "Timeline", "TimelineEvent", "TransferLedger", "Timer", "ledger",
     "HOST", "BandwidthModel", "Location",
     "PagedKVPool", "gather_kv", "init_pool_arrays", "write_token",
     "PE", "Runtime", "Task", "make_emulated_soc",

@@ -1,0 +1,308 @@
+"""Async task-graph executor: per-PE workers, prefetch, HEFT-lite.
+
+This is the runtime half of the ISSUE-1 subsystem (the DAG half lives in
+:mod:`repro.core.graph`).  Execution model:
+
+* one worker thread per PE, fed by a FIFO queue — same-PE tasks
+  serialize, different PEs run concurrently;
+* **input prefetch**: the moment a task's dependencies complete, its
+  input staging (``hete_Data`` flag checks + src→PE copies) is submitted
+  to a transfer pool, so the copy overlaps whatever the target PE is
+  still computing — the paper's §3.2.2 premise (the runtime knows where
+  valid bytes live) finally buys wall-clock, not just copy counts;
+* scheduling: ``round_robin`` (static, bit-identical to serial dispatch),
+  ``data_affinity`` (dynamic, flag-aware), or ``heft`` — a HEFT-lite
+  list scheduler that ranks ready tasks by upward rank and places each on
+  the PE minimizing estimated finish time under the
+  :class:`~repro.core.locations.BandwidthModel` and the online
+  :class:`~repro.core.graph.CostModel`.
+
+Because every PE here is emulated on one physical CPU, the *measured*
+wall clock understates the win; the executor therefore also simulates
+the schedule it actually executed (modeled transfer seconds + measured
+kernel seconds) and reports a modeled makespan, directly comparable to
+the serial :meth:`Runtime.run` modeled makespan.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, TYPE_CHECKING
+
+from .graph import TaskGraph, TaskNode, build_graph
+from .instrument import Timeline, TimelineEvent
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycle
+    from .runtime import PE, Runtime, Task
+
+__all__ = ["GraphExecutor"]
+
+_SENTINEL = None
+
+
+def _reap_future(fut: Optional[Future]) -> None:
+    """Cancel an abandoned prefetch future, or — if it already started —
+    wait and swallow its outcome so staging errors are never left
+    unretrieved."""
+    if fut is not None and not fut.cancel():
+        try:
+            fut.exception()
+        except BaseException:
+            pass
+
+
+class GraphExecutor:
+    """Executes one task list as a DAG on a :class:`Runtime`'s PEs."""
+
+    def __init__(
+        self,
+        rt: "Runtime",
+        *,
+        scheduler: Optional[str] = None,
+        prefetch: bool = True,
+    ) -> None:
+        from .runtime import SCHEDULERS  # local: no cycle at module load
+
+        self.rt = rt
+        self.scheduler = scheduler or rt.scheduler
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r}")
+        self.prefetch = prefetch
+
+    # -- public entry -------------------------------------------------------
+    def run(self, tasks: Sequence["Task"]) -> Dict[str, Any]:
+        rt = self.rt
+        rt.timeline = Timeline()
+        graph = build_graph(tasks)
+        if not len(graph):
+            rt.last_makespan_model = 0.0
+            return self._report(graph, 0.0)
+
+        self._graph = graph
+        self._lock = threading.Lock()
+        self._done = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._remaining = [len(n.deps) for n in graph.nodes]
+        self._completed = 0
+        self._model_finish: Dict[int, float] = {}
+        self._pe_model: Dict[str, float] = {pe.name: 0.0 for pe in rt.pes}
+        self._sched_avail: Dict[str, float] = {pe.name: 0.0 for pe in rt.pes}
+        self._queues: Dict[str, "queue.Queue"] = {
+            pe.name: queue.Queue() for pe in rt.pes
+        }
+
+        if self.scheduler == "heft":
+            self._rank(graph)
+        # Static policies assign in submission order so placement (and
+        # therefore rimms copy counts) is bit-identical to serial run().
+        self._static: Optional[List["PE"]] = None
+        if self.scheduler == "round_robin":
+            self._static = [rt._schedule(n.task) for n in graph.nodes]
+
+        self._pool = (
+            ThreadPoolExecutor(
+                max_workers=max(2, len(rt.pes)),
+                thread_name_prefix="rimms-xfer",
+            )
+            if self.prefetch
+            else None
+        )
+        workers = [
+            threading.Thread(
+                target=self._worker, args=(pe,), name=f"rimms-{pe.name}",
+                daemon=True,
+            )
+            for pe in rt.pes
+        ]
+
+        self._t0 = time.perf_counter()
+        for w in workers:
+            w.start()
+        try:
+            with self._lock:
+                ready = [n.index for n in graph.nodes if not n.deps]
+                self._schedule_ready(ready)
+            self._done.wait()
+        finally:
+            for q in self._queues.values():
+                q.put(_SENTINEL)
+            for w in workers:
+                w.join()
+            # Reap items abandoned on any queue (a failing worker exits
+            # without draining; racing completions can enqueue behind the
+            # sentinel): cancel their prefetch futures so no staging runs
+            # — or leaves an unretrieved error — after the run ended.
+            for q in self._queues.values():
+                while True:
+                    try:
+                        item = q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if item is _SENTINEL:
+                        continue
+                    _reap_future(item[2])
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+        wall = time.perf_counter() - self._t0
+        if self._error is not None:
+            raise self._error
+        rt.last_makespan_model = max(self._model_finish.values(), default=0.0)
+        return self._report(graph, wall)
+
+    # -- scheduling ---------------------------------------------------------
+    def _rank(self, graph: TaskGraph) -> None:
+        rt, cm = self.rt, self.rt.cost_model
+        bw = rt.context.ledger.bandwidth_model
+
+        def compute_cost(task: "Task") -> float:
+            kinds = sorted({pe.kind for pe in rt._eligible(task)})
+            return cm.mean_estimate(task.op, kinds, task.in_bytes)
+
+        def comm_cost(task: "Task") -> float:
+            return bw.latency_s + task.in_bytes / bw.host_device_bw
+
+        graph.compute_ranks(compute_cost, comm_cost)
+
+    def _pick_pe(self, node: TaskNode) -> "PE":
+        """Dynamic placement for a ready node (deps complete ⇒ input flags
+        are final). Called under the state lock."""
+        rt, task = self.rt, node.task
+        if task.pin is not None:
+            return rt.by_name[task.pin]
+        pes = rt._eligible(task)
+        if self.scheduler == "data_affinity":
+            return rt._affinity_pick(task, pes)
+        # heft: earliest-estimated-finish-time placement, on the same
+        # cost basis as serial heft dispatch (Runtime._heft_costs) plus
+        # per-PE availability and input-readiness terms.
+        ready_m = max(
+            (self._model_finish.get(d, 0.0) for d in node.deps), default=0.0
+        )
+
+        def eft(pe: "PE") -> float:
+            tr, est = rt._heft_costs(task, pe)
+            return max(self._sched_avail[pe.name], ready_m + tr) + est
+
+        efts = {pe.name: eft(pe) for pe in pes}
+        best = min(pes, key=lambda pe: (efts[pe.name], pe.name))
+        self._sched_avail[best.name] = efts[best.name]
+        return best
+
+    def _schedule_ready(self, indices: List[int]) -> None:
+        """Assign + enqueue newly-ready nodes (under the state lock).
+        HEFT processes the batch highest-upward-rank first."""
+        nodes = self._graph.nodes
+        if self.scheduler == "heft":
+            indices = sorted(indices, key=lambda i: -nodes[i].rank)
+        for i in indices:
+            node = nodes[i]
+            pe = self._static[i] if self._static is not None else self._pick_pe(node)
+            fut: Optional[Future] = None
+            if self._pool is not None:
+                # Prefetch: stage inputs now, possibly while `pe` is still
+                # busy with an earlier task — transfer/compute overlap.
+                fut = self._pool.submit(self.rt._stage_inputs, node.task, pe)
+            self._queues[pe.name].put((i, pe, fut))
+
+    # -- workers ------------------------------------------------------------
+    def _worker(self, pe: "PE") -> None:
+        rt, q = self.rt, self._queues[pe.name]
+        while True:
+            item = q.get()
+            if item is _SENTINEL:
+                return
+            if self._error is not None:
+                # Drain without executing: a peer already failed.
+                _reap_future(item[2])
+                continue
+            i, pe_assigned, fut = item
+            node = self._graph.nodes[i]
+            try:
+                w0 = time.perf_counter()
+                if fut is not None:
+                    ins, tr_s = fut.result()
+                else:
+                    ins, tr_s = rt._stage_inputs(node.task, pe_assigned)
+                outs, comp_s = rt._run_kernel(node.task, pe_assigned, ins)
+                out_s = rt._commit_outputs(node.task, pe_assigned, outs)
+                w1 = time.perf_counter()
+                # _complete can itself raise while scheduling newly-ready
+                # dependents (unknown pin, op with no eligible PE) — it
+                # must stay inside the except so the run never hangs.
+                self._complete(node, pe_assigned, w0, w1, tr_s, comp_s, out_s)
+            except BaseException as e:  # surface to the caller, stop the run
+                with self._lock:
+                    if self._error is None:
+                        self._error = e
+                self._done.set()
+                return
+
+    def _complete(
+        self,
+        node: TaskNode,
+        pe: "PE",
+        w0: float,
+        w1: float,
+        tr_s: float,
+        comp_s: float,
+        out_s: float,
+    ) -> None:
+        rt = self.rt
+        with self._lock:
+            # Schedule simulation: this task's transfers could start once
+            # its inputs existed (ready_m), overlapping the PE's previous
+            # compute; its compute starts when both the PE and the staged
+            # inputs are available.
+            ready_m = max(
+                (self._model_finish.get(d, 0.0) for d in node.deps), default=0.0
+            )
+            # Static compute estimate, not contended measured seconds —
+            # keeps the simulation comparable to serial run() (see
+            # CostModel.prior_estimate).
+            comp_m = rt.cost_model.prior_estimate(
+                node.task.op, pe.kind, node.task.in_bytes
+            )
+            compute_start_m = max(self._pe_model[pe.name], ready_m + tr_s)
+            finish_m = compute_start_m + comp_m + out_s
+            self._pe_model[pe.name] = finish_m
+            self._model_finish[node.index] = finish_m
+            rt.timeline.add(TimelineEvent(
+                task=node.name, pe=pe.name,
+                wall_start=w0 - self._t0, wall_end=w1 - self._t0,
+                model_start=max(ready_m, compute_start_m - tr_s),
+                model_end=finish_m,
+                transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
+            ))
+            rt.task_log.append((node.name, pe.name))
+            self._completed += 1
+            newly_ready: List[int] = []
+            for s in node.dependents:
+                self._remaining[s] -= 1
+                if self._remaining[s] == 0:
+                    newly_ready.append(s)
+            if newly_ready:
+                self._schedule_ready(newly_ready)
+            if self._completed == len(self._graph):
+                self._done.set()
+
+    # -- reporting ----------------------------------------------------------
+    def _report(self, graph: TaskGraph, wall: float) -> Dict[str, Any]:
+        rt = self.rt
+        per_pe: Dict[str, float] = {}
+        for ev in rt.timeline.events():
+            per_pe[ev.pe] = per_pe.get(ev.pe, 0.0) + (ev.model_end - ev.model_start)
+        return {
+            "wall_s": wall,
+            "makespan_model": rt.last_makespan_model,
+            "n_tasks": len(graph),
+            "n_edges": graph.n_edges,
+            "critical_path": graph.critical_path_len,
+            "scheduler": self.scheduler,
+            "policy": rt.policy,
+            "prefetch": self.prefetch,
+            "per_pe_busy_model_s": per_pe,
+            "timeline": rt.timeline,
+        }

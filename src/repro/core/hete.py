@@ -10,7 +10,8 @@ This is the paper's contribution, ported to JAX:
   the target resource arena through a marking system
   (:mod:`repro.core.allocator`) and exposes a host-resident data field;
   device materializations are created lazily by the runtime at task
-  dispatch.
+  dispatch — and *reserve an arena extent at that point*, so a space's
+  ``capacity`` is enforced whenever bytes actually land there.
 * :meth:`HeteData.fragment` — O(n) subdivision of one allocation into n
   sub-buffers, each with its *own* last-resource flag, without touching
   the arena (RIMMS §3.2.3). ``hd[i]`` indexes the i-th fragment.
@@ -21,12 +22,18 @@ buffer; a task reading a buffer whose flag names another location pulls a
 copy directly from that location (no host bounce).  ``tracking="cached"``
 additionally remembers read-replicas (a beyond-paper optimization,
 benchmarked separately; default is the paper's flag-only behaviour).
+
+Thread safety: each :class:`HeteData` carries a lock serializing
+``ensure``/``mark_written`` on that buffer, and arena reservations go
+through a context-wide lock — the graph executor stages inputs from a
+transfer pool concurrently with PE workers committing outputs.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -102,6 +109,13 @@ class HeteData:
     # beyond-paper read-replica cache; faithful mode ignores it
     valid_at: set = dataclasses.field(default_factory=set)
     freed: bool = False
+    # set when a fragment was written since the parent's copy was last
+    # coherent — a whole-parent read gathers fragments first (see
+    # HeteContext._gather_fragments)
+    frag_dirty: bool = False
+    lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, repr=False, compare=False
+    )
 
     # -- basics -----------------------------------------------------------
     @property
@@ -130,6 +144,22 @@ class HeteData:
     def __len__(self) -> int:
         return 0 if self.fragments is None else len(self.fragments)
 
+    # -- aliasing (used by the task-graph builder) -------------------------
+    @property
+    def root(self) -> "HeteData":
+        """The top-level allocation this buffer belongs to (self if not a
+        fragment)."""
+        return self.parent if self.parent is not None else self
+
+    def byte_interval(self) -> Tuple[int, int]:
+        """``[lo, hi)`` byte range inside :attr:`root`'s allocation —
+        fragments alias their parent over this interval."""
+        if self.parent is None:
+            return (0, self.nbytes)
+        per_elem = self.nbytes // int(self.shape[0])
+        lo = self.frag_offset * per_elem
+        return (lo, lo + self.nbytes)
+
     # -- fragmentation (§3.2.3) --------------------------------------------
     def fragment(self, frag_elems: int) -> List["HeteData"]:
         """Subdivide into fragments of ``frag_elems`` leading elements.
@@ -137,6 +167,12 @@ class HeteData:
         O(n) in the number of fragments; does NOT touch the arenas (the
         parent's reserved extents simply get logically partitioned), which
         is the paper's point: one search, n usable buffers.
+
+        Each fragment inherits the parent's last-resource flag.  When the
+        parent's valid copy lives on a device, fragments also receive a
+        sliced view of that device copy, so ``ensure``/``sync`` on a
+        fragment resolves to the *current* bytes — never the stale host
+        view (see tests/test_hete.py::test_fragment_of_device_parent).
         """
         if self.parent is not None:
             raise ValueError("cannot fragment a fragment")
@@ -147,6 +183,11 @@ class HeteData:
             )
         n = total // frag_elems
         host_buf = self.copies[HOST]
+        dev_buf = (
+            self.copies.get(self.last_location)
+            if self.last_location != HOST
+            else None
+        )
         frags: List[HeteData] = []
         for i in range(n):
             sub = HeteData(
@@ -159,9 +200,14 @@ class HeteData:
             )
             # zero-copy host view into the parent buffer
             sub.copies[HOST] = host_buf[i * frag_elems : (i + 1) * frag_elems]
+            if dev_buf is not None:
+                sub.copies[self.last_location] = dev_buf[
+                    i * frag_elems : (i + 1) * frag_elems
+                ]
             sub.valid_at = {self.last_location}
             frags.append(sub)
         self.fragments = frags
+        self.frag_dirty = False
         return frags
 
 
@@ -180,6 +226,7 @@ class HeteContext:
         # experiments (reference vs rimms) never share counters.
         self.ledger = ledger if ledger is not None else TransferLedger()
         self.spaces: Dict[Location, MemorySpace] = {HOST: MemorySpace(HOST)}
+        self._arena_lock = threading.RLock()
 
     # -- registry ----------------------------------------------------------
     def register_space(self, space: MemorySpace) -> MemorySpace:
@@ -207,9 +254,7 @@ class HeteContext:
         hd.copies[HOST] = np.zeros(shape, dtype=dtype)
         hd.valid_at = {HOST}
         for loc in spaces:
-            space = self.spaces[loc]
-            if space.arena is not None:
-                hd.extents[loc] = space.arena.alloc(hd.nbytes)
+            self._reserve(hd, loc)
         return hd
 
     def free(self, hd: HeteData) -> None:
@@ -223,11 +268,12 @@ class HeteContext:
                 f.copies.clear()
                 f.freed = True
             hd.fragments = None
-        for loc, ext in hd.extents.items():
-            space = self.spaces[loc]
-            if space.arena is not None:
-                space.arena.free(ext)
-        hd.extents.clear()
+        with self._arena_lock:
+            for loc, ext in hd.extents.items():
+                space = self.spaces[loc]
+                if space.arena is not None:
+                    space.arena.free(ext)
+            hd.extents.clear()
         hd.copies.clear()
         hd.valid_at.clear()
         hd.freed = True
@@ -235,6 +281,29 @@ class HeteContext:
     def sync(self, hd: HeteData) -> np.ndarray:
         """``hete_Sync``: make the host copy current; return it."""
         return self.ensure(hd, HOST)
+
+    # -- arena accounting ---------------------------------------------------
+    def _reserve(self, hd: HeteData, loc: Location) -> None:
+        """Reserve an extent for ``hd``'s root allocation in ``loc``'s
+        arena on first materialization there (no-op for spaces without a
+        capacity arena).  Fragments charge their parent's full extent —
+        one arena search covers all n fragments (§3.2.3)."""
+        root = hd.root
+        space = self.spaces[loc]
+        if space.arena is None:
+            return
+        with self._arena_lock:
+            if loc in root.extents:
+                return
+            try:
+                root.extents[loc] = space.arena.alloc(root.nbytes)
+            except AllocError as e:
+                raise AllocError(
+                    f"memory space {loc} exhausted: cannot reserve "
+                    f"{root.nbytes} B for buffer shape={root.shape} "
+                    f"({space.arena.free_bytes} B free of "
+                    f"{space.arena.capacity} B): {e}"
+                ) from e
 
     # -- runtime-internal protocol (§3.2.2) ----------------------------------
     def ensure(self, hd: HeteData, dst: Location) -> Any:
@@ -244,34 +313,97 @@ class HeteContext:
         per input. A copy is issued only when the flag names another
         location, and it goes *directly* src→dst (Fig 1b), never via host.
         """
+        return self.stage(hd, dst)[0]
+
+    def stage(self, hd: HeteData, dst: Location) -> Tuple[Any, float]:
+        """:meth:`ensure` + report of the modeled seconds of the copy it
+        performed (0.0 on a flag hit).  The graph executor uses the
+        second element for schedule simulation."""
         self.ledger.record_flag_check()
         if hd.freed:
             raise AllocError("use after hete_free")
-        src = hd.last_location
-        if dst == src:
-            return hd.copies[dst]
-        if self.tracking == "cached" and dst in hd.valid_at and dst in hd.copies:
-            return hd.copies[dst]
-        value = hd.copies[src]
-        host_np = self.spaces[src].egress(value) if src != HOST else value
-        moved = self.spaces[dst].ingest(host_np) if dst != HOST else host_np
-        hd.copies[dst] = moved
-        hd.valid_at.add(dst)
-        self.ledger.record(src, dst, hd.nbytes)
-        return moved
+        # Lock-free fast path for the flag hit — the 1–2 cycle check the
+        # paper measures (§5.2.2) must not pay a lock.  Safe because the
+        # task graph orders writers against readers: the flag cannot move
+        # concurrently with this read.
+        if hd.last_location == dst and not (hd.fragments and hd.frag_dirty):
+            return hd.copies[dst], 0.0
+        with hd.lock:
+            if hd.fragments and hd.frag_dirty:
+                self._gather_fragments(hd)
+            src = hd.last_location
+            if dst == src:
+                return hd.copies[dst], 0.0
+            if self.tracking == "cached" and dst in hd.valid_at and dst in hd.copies:
+                return hd.copies[dst], 0.0
+            if dst != HOST:
+                self._reserve(hd, dst)
+            value = hd.copies[src]
+            host_np = self.spaces[src].egress(value) if src != HOST else value
+            if dst == HOST and (hd.parent is not None or hd.fragments):
+                # preserve the zero-copy host views linking parent and
+                # fragments (rebinding would orphan them)
+                np.copyto(hd.copies[HOST], np.asarray(host_np).reshape(hd.shape))
+                moved = hd.copies[HOST]
+            else:
+                moved = self.spaces[dst].ingest(host_np) if dst != HOST else host_np
+                hd.copies[dst] = moved
+            hd.valid_at.add(dst)
+            self.ledger.record(src, dst, hd.nbytes)
+            return moved, self.ledger.bandwidth_model.seconds(src, dst, hd.nbytes)
 
     def mark_written(self, hd: HeteData, loc: Location, value: Any) -> None:
         """A task on ``loc`` produced ``value`` into ``hd`` (output flag
-        update, §3.2.2 — the *only* place the flag moves)."""
+        update, §3.2.2 — the *only* place the flag moves).
+
+        Parent/fragment coherence: writing a fragmented parent propagates
+        sliced copies + the flag to every fragment; writing a fragment
+        marks its parent dirty, so a later whole-parent read gathers the
+        fragments' bytes first (the task graph supplies the ordering,
+        this supplies the data).
+        """
         if hd.freed:
             raise AllocError("use after hete_free")
-        if loc == HOST and hd.parent is not None:
-            # preserve the zero-copy view into the parent host buffer
-            np.copyto(hd.copies[HOST], np.asarray(value).reshape(hd.shape))
-        else:
-            hd.copies[loc] = value
-        hd.last_location = loc
-        hd.valid_at = {loc}
+        with hd.lock:
+            if loc == HOST and (hd.parent is not None or hd.fragments):
+                # preserve the zero-copy host views linking parent and
+                # fragments (rebinding would orphan them)
+                np.copyto(hd.copies[HOST], np.asarray(value).reshape(hd.shape))
+            else:
+                if loc != HOST:
+                    self._reserve(hd, loc)
+                hd.copies[loc] = value
+            hd.last_location = loc
+            hd.valid_at = {loc}
+            if hd.parent is not None:
+                hd.parent.frag_dirty = True
+            if hd.fragments:
+                self._propagate_to_fragments(hd, loc)
+                hd.frag_dirty = False
+
+    def _propagate_to_fragments(self, hd: HeteData, loc: Location) -> None:
+        """A whole-parent write supersedes every fragment: move their
+        flags to ``loc`` and hand each a slice of the new value (host
+        views already alias the parent buffer)."""
+        value = hd.copies[loc]
+        step = int(hd.fragments[0].shape[0])
+        for i, frag in enumerate(hd.fragments):
+            with frag.lock:
+                frag.last_location = loc
+                frag.valid_at = {loc}
+                if loc != HOST:
+                    frag.copies[loc] = value[i * step : (i + 1) * step]
+
+    def _gather_fragments(self, hd: HeteData) -> None:
+        """Make a fragmented parent's host copy current by syncing every
+        fragment through its zero-copy host view (direct device→host
+        copies, recorded in the ledger), then flag the parent at HOST.
+        Called under ``hd.lock`` before a whole-parent read."""
+        for frag in hd.fragments:
+            self.ensure(frag, HOST)
+        hd.last_location = HOST
+        hd.valid_at = {HOST}
+        hd.frag_dirty = False
 
 
 #: default module-level context, mirroring the paper's single-runtime setup

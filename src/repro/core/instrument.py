@@ -5,19 +5,24 @@ a :class:`TransferLedger`.  The paper's headline results are *eliminated
 copies* (Fig 1, Fig 5: CPU-ACC saves 1 copy, ACC-ACC saves 3) — with the
 ledger we can assert those counts exactly, and additionally integrate a
 modeled transfer time under configurable link bandwidths.
+
+Both :class:`TransferLedger` and :class:`Timeline` are thread-safe: the
+graph executor (:mod:`repro.core.executor`) records from one worker
+thread per PE plus a transfer pool concurrently.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 import time
 from collections import Counter
-from typing import Iterator, Optional
+from typing import Iterator, List, Optional
 
 from .locations import DEFAULT_BANDWIDTH_MODEL, BandwidthModel, Location
 
-__all__ = ["TransferLedger", "ledger", "Timer"]
+__all__ = ["TransferLedger", "ledger", "Timer", "Timeline", "TimelineEvent"]
 
 
 @dataclasses.dataclass
@@ -31,14 +36,21 @@ class TransferLedger:
     bytes_moved: Counter = dataclasses.field(default_factory=Counter)
     modeled_seconds: float = 0.0
     flag_checks: int = 0  # last-resource-flag checks (§5.2.2 microbench)
+    _lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, repr=False, compare=False
+    )
 
     def record(self, src: Location, dst: Location, nbytes: int) -> None:
         key = (str(src), str(dst))
-        self.copies[key] += 1
-        self.bytes_moved[key] += nbytes
-        self.modeled_seconds += self.bandwidth_model.seconds(src, dst, nbytes)
+        with self._lock:
+            self.copies[key] += 1
+            self.bytes_moved[key] += nbytes
+            self.modeled_seconds += self.bandwidth_model.seconds(src, dst, nbytes)
 
     def record_flag_check(self, n: int = 1) -> None:
+        # Deliberately lock-free: this sits on the §5.2.2 flag-check hot
+        # path, and flag_checks is a diagnostic counter where a rare lost
+        # update under contention is acceptable.
         self.flag_checks += n
 
     # -- aggregates -------------------------------------------------------
@@ -51,19 +63,23 @@ class TransferLedger:
         return sum(self.bytes_moved.values())
 
     def reset(self) -> None:
-        self.copies.clear()
-        self.bytes_moved.clear()
-        self.modeled_seconds = 0.0
-        self.flag_checks = 0
+        with self._lock:
+            self.copies.clear()
+            self.bytes_moved.clear()
+            self.modeled_seconds = 0.0
+            self.flag_checks = 0
 
     def snapshot(self) -> dict:
-        return {
-            "total_copies": self.total_copies,
-            "total_bytes": self.total_bytes,
-            "modeled_seconds": self.modeled_seconds,
-            "flag_checks": self.flag_checks,
-            "by_pair": {f"{s}->{d}": c for (s, d), c in sorted(self.copies.items())},
-        }
+        with self._lock:
+            return {
+                "total_copies": self.total_copies,
+                "total_bytes": self.total_bytes,
+                "modeled_seconds": self.modeled_seconds,
+                "flag_checks": self.flag_checks,
+                "by_pair": {
+                    f"{s}->{d}": c for (s, d), c in sorted(self.copies.items())
+                },
+            }
 
 
 #: process-global ledger; runtimes may use their own instance instead.
@@ -91,3 +107,75 @@ class Timer:
 
     def __exit__(self, *exc) -> None:
         self.seconds = time.perf_counter() - self.start
+
+
+# ---------------------------------------------------------------------------
+# Per-task timeline — Gantt-style evidence for transfer/compute overlap
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineEvent:
+    """One executed task: wall-clock and modeled intervals on one PE.
+
+    ``model_start``/``model_end`` come from the executor's schedule
+    simulation (modeled transfer seconds + measured compute seconds), so
+    a Gantt over them shows where overlap saved modeled makespan even on
+    a box where all PEs share one physical CPU.
+    """
+
+    task: str
+    pe: str
+    wall_start: float
+    wall_end: float
+    model_start: float
+    model_end: float
+    transfer_s: float  # modeled input-staging seconds (0 on flag hits)
+    compute_s: float  # measured kernel seconds
+    out_transfer_s: float = 0.0  # modeled output writeback (reference policy)
+
+
+class Timeline:
+    """Thread-safe ordered record of :class:`TimelineEvent`."""
+
+    def __init__(self) -> None:
+        self._events: List[TimelineEvent] = []
+        self._lock = threading.Lock()
+
+    def add(self, ev: TimelineEvent) -> None:
+        with self._lock:
+            self._events.append(ev)
+
+    def events(self) -> List[TimelineEvent]:
+        with self._lock:
+            return sorted(self._events, key=lambda e: (e.model_start, e.pe))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events)
+
+    @property
+    def makespan_model(self) -> float:
+        with self._lock:
+            return max((e.model_end for e in self._events), default=0.0)
+
+    def gantt(self, width: int = 72) -> str:
+        """Render a text Gantt chart over modeled time, one row per PE."""
+        width = max(width, 12)  # room for the axis label row
+        evs = self.events()
+        if not evs:
+            return "(empty timeline)"
+        span = max(e.model_end for e in evs) or 1.0
+        rows = []
+        for pe in sorted({e.pe for e in evs}):
+            line = [" "] * width
+            for e in evs:
+                if e.pe != pe:
+                    continue
+                a = int(e.model_start / span * (width - 1))
+                b = max(a + 1, int(e.model_end / span * (width - 1)))
+                for i in range(a, min(b, width)):
+                    line[i] = "#" if line[i] == " " else "+"
+            rows.append(f"{pe:>10s} |{''.join(line)}|")
+        rows.append(f"{'':>10s}  0{'':{width - 10}s}{span * 1e3:.2f} ms (modeled)")
+        return "\n".join(rows)

@@ -2,8 +2,9 @@
 
 A small dynamic task runtime: applications submit *API calls* (tasks) over
 :class:`~repro.core.hete.HeteData` buffers; a scheduler maps each task to a
-processing element (PE) at dispatch time (round-robin, pinned, or
-data-affinity); the memory policy decides what data movement happens.
+processing element (PE) at dispatch time (round-robin, pinned,
+data-affinity, or transfer-aware HEFT-lite); the memory policy decides
+what data movement happens.
 
 Two memory policies, both first-class so every experiment reports the pair:
 
@@ -13,6 +14,14 @@ Two memory policies, both first-class so every experiment reports the pair:
 * ``"rimms"``     — the paper's contribution: per-input last-resource-flag
   check, direct src→PE copy only when the flag names another location,
   output flag update to the executing PE (Fig 1b).
+
+Two execution modes share the same stage → execute → commit pipeline:
+
+* :meth:`Runtime.run` — serial, submission order (CEDR's API-level
+  serialization);
+* :meth:`Runtime.run_graph` — the async task-graph executor
+  (:mod:`repro.core.executor`): automatic DAG construction, one worker
+  per PE, input prefetch overlapping transfers with compute.
 
 PEs are emulated on this CPU-only box: a "cpu" PE executes numpy
 callables against host memory; accelerator PEs ("fft_acc", "zip_acc",
@@ -26,14 +35,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .graph import CostModel
 from .hete import HeteContext, HeteData, MemorySpace
+from .instrument import Timeline, TimelineEvent
 from .locations import HOST, Location
 
-__all__ = ["PE", "Task", "Runtime", "make_emulated_soc"]
+__all__ = ["PE", "Task", "Runtime", "make_emulated_soc", "SCHEDULERS"]
+
+SCHEDULERS = ("round_robin", "data_affinity", "heft")
 
 
 @dataclasses.dataclass
@@ -60,6 +73,14 @@ class Task:
     pin: Optional[str] = None  # pin to a PE name (CPU-ACC style scenarios)
     name: str = ""
 
+    @property
+    def in_bytes(self) -> int:
+        return sum(hd.nbytes for hd in self.inputs)
+
+    @property
+    def out_bytes(self) -> int:
+        return sum(hd.nbytes for hd in self.outputs)
+
 
 class Runtime:
     """Dispatch loop: schedule → move (policy) → execute → flag update."""
@@ -71,20 +92,25 @@ class Runtime:
         *,
         policy: str = "rimms",
         scheduler: str = "round_robin",
+        cost_model: Optional[CostModel] = None,
     ) -> None:
         if policy not in ("rimms", "reference"):
             raise ValueError(f"unknown memory policy {policy!r}")
-        if scheduler not in ("round_robin", "data_affinity"):
+        if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.pes = list(pes)
         self.by_name = {pe.name: pe for pe in self.pes}
         self.context = context
         self.policy = policy
         self.scheduler = scheduler
+        self.cost_model = cost_model or CostModel()
         self._rr_state: Dict[str, int] = {}
         # kernels: (op, pe_kind) -> callable(list_of_arrays, **params) -> tuple
         self._kernels: Dict[tuple, Callable] = {}
         self.task_log: List[tuple] = []  # (task name/op, pe name) for tests
+        self.timeline = Timeline()  # replaced per run/run_graph
+        self.last_makespan_model = 0.0
+        self.last_report: Optional[Dict[str, Any]] = None  # set by run_graph
 
     # -- registration -------------------------------------------------------
     def register_kernel(self, op: str, pe_kind: str, fn: Callable) -> None:
@@ -109,56 +135,155 @@ class Runtime:
             i = self._rr_state.get(task.op, 0)
             self._rr_state[task.op] = (i + 1) % len(pes)
             return pes[i % len(pes)]
-        # data_affinity (beyond-paper): most input bytes already valid at PE
+        if self.scheduler == "heft":
+            # Transfer-aware greedy pick: minimize modeled staging cost +
+            # estimated compute (per-PE availability is the executor's
+            # refinement; serial dispatch has no queues to account for).
+            return min(pes, key=lambda pe: (sum(self._heft_costs(task, pe)),
+                                            pe.name))
+        # data_affinity (beyond-paper)
+        return self._affinity_pick(task, pes)
+
+    def _affinity_pick(self, task: Task, pes: Sequence[PE]) -> PE:
+        """Most input bytes already valid at the PE; ties broken by stable
+        PE-name ordering (deterministic).  Shared by serial dispatch and
+        the graph executor."""
         def score(pe: PE) -> int:
             return sum(
                 hd.nbytes for hd in task.inputs if hd.last_location == pe.location
             )
-        return max(pes, key=score)
+        return min(pes, key=lambda pe: (-score(pe), pe.name))
 
-    # -- execution --------------------------------------------------------------
-    def run(self, tasks: Sequence[Task]) -> float:
-        """Execute tasks in submission order (data deps are submission-
-        ordered by the apps, matching CEDR's API-level serialization).
-        Returns wall seconds."""
-        t0 = time.perf_counter()
-        for task in tasks:
-            self._dispatch(task)
-        return time.perf_counter() - t0
+    def _heft_costs(self, task: Task, pe: PE) -> Tuple[float, float]:
+        """(modeled input-transfer seconds, estimated compute seconds) for
+        placing ``task`` on ``pe`` — the shared EFT cost basis for serial
+        heft dispatch and the graph executor's placement."""
+        bw = self.context.ledger.bandwidth_model
+        tr = sum(
+            bw.seconds(hd.last_location, pe.location, hd.nbytes)
+            for hd in task.inputs
+            if hd.last_location != pe.location
+        )
+        return tr, self.cost_model.estimate(task.op, pe.kind, task.in_bytes)
 
-    def _dispatch(self, task: Task) -> None:
-        pe = self._schedule(task)
-        fn = self._kernels[(task.op, pe.kind)]
-        ctx = self.context
-        loc = pe.location
-
+    # -- stage → execute → commit (shared by serial and graph modes) ---------
+    def _stage_inputs(self, task: Task, pe: PE) -> Tuple[List[Any], float]:
+        """Materialize ``task``'s inputs at ``pe`` under the memory policy.
+        Returns (input values, modeled transfer seconds actually spent)."""
+        ctx, loc = self.context, pe.location
+        bw = ctx.ledger.bandwidth_model
+        ins: List[Any] = []
+        model_s = 0.0
         if self.policy == "reference":
-            # Host-owned: host must be current first (producer wrote to
-            # host already under this policy), then copy host→PE.
-            ins = []
+            # Host-owned: host is current (producer wrote host under this
+            # policy); copy host→PE unconditionally.
             for hd in task.inputs:
-                host_val = hd.copies[HOST]
-                if loc != HOST:
-                    moved = ctx.spaces[loc].ingest(host_val)
-                    ctx.ledger.record(HOST, loc, hd.nbytes)
-                    ins.append(moved)
-                else:
-                    ins.append(host_val)
-            outs = _as_tuple(fn(ins, **task.params))
+                with hd.lock:
+                    host_val = hd.copies[HOST]
+                    if loc != HOST:
+                        moved = ctx.spaces[loc].ingest(host_val)
+                        ctx.ledger.record(HOST, loc, hd.nbytes)
+                        model_s += bw.seconds(HOST, loc, hd.nbytes)
+                        ins.append(moved)
+                    else:
+                        ins.append(host_val)
+        else:  # rimms: flag check + direct src→PE copy only when needed
+            for hd in task.inputs:
+                value, tr_s = ctx.stage(hd, loc)
+                ins.append(value)
+                model_s += tr_s
+        return ins, model_s
+
+    def _run_kernel(self, task: Task, pe: PE, ins: List[Any]) -> Tuple[tuple, float]:
+        """Execute the kernel; returns (outputs, measured seconds).  Blocks
+        async (JAX) dispatch so timings feed the cost model honestly."""
+        fn = self._kernels[(task.op, pe.kind)]
+        t0 = time.perf_counter()
+        outs = _as_tuple(fn(ins, **task.params))
+        if pe.location != HOST:
+            try:
+                import jax
+                outs = tuple(jax.block_until_ready(o) for o in outs)
+            except ImportError:  # pragma: no cover - jax is baked in
+                pass
+        dt = time.perf_counter() - t0
+        self.cost_model.observe(task.op, pe.kind, task.in_bytes, dt)
+        return outs, dt
+
+    def _commit_outputs(self, task: Task, pe: PE, outs: tuple) -> float:
+        """Flag updates (+ host writeback under reference). Returns modeled
+        output-transfer seconds."""
+        ctx, loc = self.context, pe.location
+        bw = ctx.ledger.bandwidth_model
+        model_s = 0.0
+        if self.policy == "reference":
             for hd, val in zip(task.outputs, outs):
                 if loc != HOST:
                     host_val = ctx.spaces[loc].egress(val)
                     ctx.ledger.record(loc, HOST, hd.nbytes)
+                    model_s += bw.seconds(loc, HOST, hd.nbytes)
                 else:
                     host_val = np.asarray(val)
                 ctx.mark_written(hd, HOST, host_val.reshape(hd.shape))
-        else:  # rimms
-            ins = [ctx.ensure(hd, loc) for hd in task.inputs]
-            outs = _as_tuple(fn(ins, **task.params))
+        else:
             for hd, val in zip(task.outputs, outs):
                 ctx.mark_written(hd, loc, val)
+        return model_s
 
-        self.task_log.append((task.name or task.op, pe.name))
+    # -- execution --------------------------------------------------------------
+    def run(self, tasks: Sequence[Task]) -> float:
+        """Execute tasks serially in submission order (data deps are
+        submission-ordered by the apps, matching CEDR's API-level
+        serialization).  Returns wall seconds; fills :attr:`timeline` and
+        :attr:`last_makespan_model` for comparison against graph mode."""
+        self.timeline = Timeline()
+        model_t = 0.0
+        t0 = time.perf_counter()
+        for task in tasks:
+            pe = self._schedule(task)
+            w0 = time.perf_counter()
+            ins, tr_s = self._stage_inputs(task, pe)
+            outs, comp_s = self._run_kernel(task, pe, ins)
+            out_s = self._commit_outputs(task, pe, outs)
+            w1 = time.perf_counter()
+            # Model simulation uses the static compute estimate so serial
+            # and graph modeled makespans are directly comparable (see
+            # CostModel.prior_estimate).
+            comp_m = self.cost_model.prior_estimate(task.op, pe.kind, task.in_bytes)
+            self.timeline.add(TimelineEvent(
+                task=task.name or task.op, pe=pe.name,
+                wall_start=w0 - t0, wall_end=w1 - t0,
+                model_start=model_t, model_end=model_t + tr_s + comp_m + out_s,
+                transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
+            ))
+            model_t += tr_s + comp_m + out_s
+            self.task_log.append((task.name or task.op, pe.name))
+        self.last_makespan_model = model_t
+        return time.perf_counter() - t0
+
+    def run_graph(
+        self,
+        tasks: Sequence[Task],
+        *,
+        scheduler: Optional[str] = None,
+        prefetch: bool = True,
+    ) -> float:
+        """Execute ``tasks`` on the async task-graph executor: automatic
+        RAW/WAR/WAW DAG, one worker per PE, input prefetch overlapping
+        transfers with compute, and transfer-aware placement when
+        ``scheduler='heft'``.  Same ledger and memory policies as
+        :meth:`run`; under the ``rimms`` policy with static scheduling the
+        copy counts and outputs are identical to serial execution.
+
+        Returns wall seconds; :attr:`timeline`, :attr:`last_makespan_model`
+        and :attr:`last_report` carry the schedule evidence.
+        """
+        from .executor import GraphExecutor  # local import: avoids cycle
+
+        ex = GraphExecutor(self, scheduler=scheduler, prefetch=prefetch)
+        report = ex.run(tasks)
+        self.last_report = report
+        return report["wall_s"]
 
 
 def _as_tuple(x: Any) -> tuple:

@@ -110,6 +110,130 @@ def test_use_after_free_raises():
         ctx.free(hd)
 
 
+def test_ensure_reserves_arena_extent_on_materialization():
+    """Satellite (ISSUE 1): device copies materialized by ensure() must
+    reserve an extent, so MemorySpace.capacity is enforced at dispatch."""
+    ctx = make_ctx()
+    arena = ctx.spaces[ACC].arena
+    hd = ctx.malloc((1024,), np.uint8)  # no spaces= → nothing reserved yet
+    assert arena.used_bytes == 0
+    ctx.ensure(hd, ACC)
+    assert arena.used_bytes == 1024
+    ctx.ensure(hd, ACC)  # re-copy (flag mode) must NOT double-reserve
+    assert arena.used_bytes == 1024
+    ctx.free(hd)
+    assert arena.used_bytes == 0
+
+
+def test_mark_written_reserves_arena_extent():
+    ctx = make_ctx()
+    arena = ctx.spaces[ACC].arena
+    hd = ctx.malloc((512,), np.uint8)
+    ctx.mark_written(hd, ACC, np.ones((512,), np.uint8))
+    assert arena.used_bytes == 512
+    ctx.free(hd)
+    assert arena.used_bytes == 0
+
+
+def test_ensure_raises_clear_allocerror_on_exhaustion():
+    ctx = HeteContext()
+    ctx.register_space(MemorySpace(
+        ACC, capacity=4096, allocator="nextfit",
+        ingest=lambda a: a.copy(), egress=lambda a: np.asarray(a),
+    ))
+    big = ctx.malloc((3000,), np.uint8)
+    ctx.ensure(big, ACC)
+    too_big = ctx.malloc((3000,), np.uint8)
+    with pytest.raises(AllocError, match="exhausted"):
+        ctx.ensure(too_big, ACC)
+    ctx.free(big)  # freeing releases the extent, then the copy fits
+    ctx.ensure(too_big, ACC)
+
+
+def test_fragment_reservation_charges_parent_once():
+    """§3.2.3: materializing fragments charges ONE parent-sized extent —
+    one arena search covers all n fragments."""
+    ctx = make_ctx()
+    arena = ctx.spaces[ACC].arena
+    hd = ctx.malloc((64,), np.float32)
+    hd.fragment(16)
+    for i in range(4):
+        ctx.ensure(hd[i], ACC)
+    assert arena.n_allocs == 1
+    assert arena.used_bytes == hd.nbytes
+    ctx.free(hd)
+    assert arena.used_bytes == 0
+
+
+def test_fragment_of_device_parent():
+    """Satellite (ISSUE 1): fragments of a parent whose valid copy lives
+    on a device must not expose the stale host view — ensure/sync on the
+    fragment resolves to the device bytes (pinned semantics)."""
+    ctx = make_ctx()
+    hd = ctx.malloc((16,), np.float32)
+    hd.data[:] = 1.0
+    dev = ctx.ensure(hd, ACC)
+    ctx.mark_written(hd, ACC, dev * 3.0)  # device now holds the valid bytes
+    assert hd.last_location == ACC
+    frags = hd.fragment(8)
+    for f in frags:
+        assert f.last_location == ACC  # inherits the parent's flag
+        np.testing.assert_allclose(hete_sync(f, context=ctx), 3.0)
+    # sync wrote through the zero-copy view: parent host buffer is current
+    np.testing.assert_allclose(hd.data, 3.0)
+
+
+def test_parent_write_after_fragment_propagates_to_fragments():
+    """Coherence: a whole-parent write supersedes fragment copies — a
+    fragment read afterwards sees the new bytes, on device and host."""
+    ctx = make_ctx()
+    hd = ctx.malloc((16,), np.float32)
+    hd.data[:] = 1.0
+    dev = ctx.ensure(hd, ACC)
+    ctx.mark_written(hd, ACC, dev * 2.0)
+    hd.fragment(8)
+    # rewrite the WHOLE parent on device after fragmentation
+    ctx.mark_written(hd, ACC, ctx.ensure(hd, ACC) * 2.0)  # now 4.0
+    for f in hd.fragments:
+        assert f.last_location == ACC
+        np.testing.assert_allclose(hete_sync(f, context=ctx), 4.0)
+    # host-side whole-parent write must keep the zero-copy views intact
+    ctx.mark_written(hd, HOST, np.full((16,), 7.0, np.float32))
+    assert hd[0].last_location == HOST
+    np.testing.assert_allclose(hd[0].data, 7.0)
+
+
+def test_fragment_write_then_whole_parent_read_gathers():
+    """Coherence: fragment device writes are visible to a later whole-
+    parent read (ensure/sync gathers the fragments' bytes first)."""
+    ctx = make_ctx()
+    hd = ctx.malloc((16,), np.float32)
+    hd.data[:] = 1.0
+    frags = hd.fragment(8)
+    v = ctx.ensure(frags[0], ACC)
+    ctx.mark_written(frags[0], ACC, v * 5.0)  # fragment 0 → 5.0 on device
+    out = hete_sync(hd, context=ctx)  # whole-parent read
+    np.testing.assert_allclose(out[:8], 5.0)
+    np.testing.assert_allclose(out[8:], 1.0)
+    assert hd.last_location == HOST
+
+
+def test_parent_host_sync_keeps_fragment_views_aliased():
+    """Coherence: a whole-parent device→host sync must copy into the
+    existing host buffer (not rebind it), so fragment views stay aliased
+    and later host-side parent writes remain visible to fragments."""
+    ctx = make_ctx()
+    hd = ctx.malloc((16,), np.float32)
+    hd.data[:] = 1.0
+    hd.fragment(8)
+    dev = ctx.ensure(hd, ACC)
+    ctx.mark_written(hd, ACC, dev * 2.0)
+    np.testing.assert_allclose(hete_sync(hd, context=ctx), 2.0)  # parent sync
+    ctx.mark_written(hd, HOST, np.full((16,), 7.0, np.float32))
+    np.testing.assert_allclose(hd[0].data, 7.0)  # view still aliases
+    np.testing.assert_allclose(hete_sync(hd[0], context=ctx), 7.0)
+
+
 def test_free_parent_frees_fragments():
     ctx = make_ctx()
     hd = ctx.malloc((16,), np.float32)

@@ -1,11 +1,21 @@
-"""Optimizer + gradient compression unit/property tests."""
+"""Optimizer + gradient compression unit/property tests.
+
+The property test uses ``hypothesis`` when available; without it a
+deterministic fallback covers the same bounded-error assertion (see
+``requirements-dev.txt`` for the full dev toolchain).
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
 from repro.optim.compression import (
@@ -47,15 +57,34 @@ def test_schedule_warmup_and_decay():
     assert end == pytest.approx(0.1, abs=1e-6)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
-                max_size=300))
-def test_compression_bounded_error(vals):
+def _check_compression_bounded_error(vals):
     g = jnp.asarray(np.array(vals, np.float32))
     codes, scales = compress_grads(g)
     deq = decompress_grads(codes, scales, g.shape)
     blockmax = float(jnp.max(jnp.abs(g))) if g.size else 0.0
     assert float(jnp.max(jnp.abs(deq - g))) <= blockmax / 127.0 + 1e-6
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                    max_size=300))
+    def test_compression_bounded_error(vals):
+        _check_compression_bounded_error(vals)
+else:
+    def test_compression_bounded_error():
+        pytest.importorskip("hypothesis")
+
+
+def test_compression_bounded_error_fallback():
+    """Deterministic coverage of the bounded-error property — always
+    runs, so the core assertion holds even without hypothesis."""
+    rng = np.random.default_rng(7)
+    for size in (1, 3, 64, 300):
+        _check_compression_bounded_error(
+            (rng.uniform(-1e3, 1e3, size=size)).tolist())
+    _check_compression_bounded_error([0.0, 0.0, 0.0])
+    _check_compression_bounded_error([1e3, -1e3, 5e-7])
 
 
 def test_error_feedback_converges():

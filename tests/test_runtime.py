@@ -90,6 +90,26 @@ def test_data_affinity_scheduler_prefers_data_location():
     assert rt.task_log[0][1] == rt.task_log[1][1]
 
 
+def test_data_affinity_tie_break_is_deterministic():
+    """Satellite (ISSUE 1): equal byte scores resolve by stable PE-name
+    ordering, so placement is reproducible across runs and PE list
+    orderings."""
+    from repro.core.runtime import Runtime
+    placements = []
+    for trial in range(3):
+        rt, ctx = make_runtime(policy="rimms", n_cpu=0,
+                               accelerators=("gpu1", "gpu0", "gpu2"),
+                               scheduler="data_affinity")
+        # fresh host inputs: zero bytes valid at every accelerator → tie
+        bufs, tasks = build_2fft(ctx, 64)
+        rt.run(tasks)
+        placements.append([pe for _, pe in rt.task_log])
+    assert placements[0] == placements[1] == placements[2]
+    # the tie must resolve to the lexicographically-smallest PE name,
+    # regardless of the order accelerators were registered in
+    assert placements[0][0] == "gpu0"
+
+
 def test_pd_fragment_allocation_counts():
     """§3.2.3: with fragment(), one arena search per data point."""
     rt, ctx = make_runtime(policy="rimms", accelerators=("gpu0",))
