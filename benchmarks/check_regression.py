@@ -1,0 +1,76 @@
+"""CI perf-regression gate over BENCH_*.json artifacts (ISSUE 2).
+
+Each smoke benchmark emits a machine-readable record whose ``gate`` dict
+holds *modeled*, machine-independent metrics (makespan under the
+bandwidth model + static cost priors, exact ledger copy counts).  This
+tool compares a freshly produced record against the committed baseline
+of the same name under ``benchmarks/baselines/`` and fails (exit 1) if
+any gated metric regressed more than ``--tolerance`` (default 10%).
+
+Improvements are reported; to ratchet the baseline down, re-run the
+bench locally and commit the new JSON.
+
+Usage:
+  python -m benchmarks.check_regression BENCH_graph.json BENCH_pressure.json \\
+      [--baselines benchmarks/baselines] [--tolerance 0.10]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINES = Path(__file__).resolve().parent / "baselines"
+
+
+def check_file(produced: Path, baselines: Path, tolerance: float) -> list:
+    """Returns a list of failure strings (empty = pass)."""
+    base_path = baselines / produced.name
+    if not base_path.exists():
+        return [f"{produced.name}: no committed baseline at {base_path}"]
+    rec = json.loads(produced.read_text())
+    base = json.loads(base_path.read_text())
+    gate, gate_base = rec.get("gate", {}), base.get("gate", {})
+    if not gate or not gate_base:
+        return [f"{produced.name}: missing 'gate' dict in record or baseline"]
+    failures = []
+    for key, ref in sorted(gate_base.items()):
+        if key not in gate:
+            failures.append(f"{produced.name}: gated metric {key!r} vanished")
+            continue
+        val = gate[key]
+        limit = ref * (1.0 + tolerance)
+        delta = (val - ref) / ref * 100 if ref else 0.0
+        status = "FAIL" if val > limit else "ok"
+        print(f"[{status}] {produced.name}:{key} = {val:.6g} "
+              f"(baseline {ref:.6g}, {delta:+.1f}%, limit {limit:.6g})")
+        if val > limit:
+            failures.append(
+                f"{produced.name}: {key} regressed {delta:+.1f}% "
+                f"(>{tolerance * 100:.0f}% over baseline {ref:.6g})"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("produced", nargs="+", help="freshly emitted BENCH_*.json")
+    ap.add_argument("--baselines", default=str(DEFAULT_BASELINES))
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative regression (0.10 = 10%%)")
+    args = ap.parse_args()
+    baselines = Path(args.baselines)
+    failures = []
+    for p in args.produced:
+        failures += check_file(Path(p), baselines, args.tolerance)
+    for f in failures:
+        print(f"REGRESSION: {f}", file=sys.stderr)
+    if not failures:
+        print("perf-regression gate: OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

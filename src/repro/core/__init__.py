@@ -1,9 +1,12 @@
 """RIMMS core: allocators, hete_Data tracking, task runtime, KV page pool."""
 
 from .allocator import AllocError, BitsetAllocator, Extent, NextFitAllocator, make_allocator
-from .executor import GraphExecutor
+from .executor import GraphExecutor, WorkerPool
 from .graph import CostModel, TaskGraph, TaskNode, build_graph
-from .hete import HeteContext, HeteData, default_context, hete_free, hete_malloc, hete_sync
+from .hete import (
+    HeteContext, HeteData, PrefetchDeferred, default_context,
+    hete_free, hete_malloc, hete_sync,
+)
 from .instrument import Timeline, TimelineEvent, TransferLedger, Timer, ledger
 from .locations import HOST, BandwidthModel, Location
 from .paged_kv import PagedKVPool, gather_kv, init_pool_arrays, write_token
@@ -11,8 +14,9 @@ from .runtime import PE, Runtime, Task, make_emulated_soc
 
 __all__ = [
     "AllocError", "BitsetAllocator", "Extent", "NextFitAllocator", "make_allocator",
-    "GraphExecutor", "CostModel", "TaskGraph", "TaskNode", "build_graph",
-    "HeteContext", "HeteData", "default_context", "hete_free", "hete_malloc", "hete_sync",
+    "GraphExecutor", "WorkerPool", "CostModel", "TaskGraph", "TaskNode", "build_graph",
+    "HeteContext", "HeteData", "PrefetchDeferred", "default_context",
+    "hete_free", "hete_malloc", "hete_sync",
     "Timeline", "TimelineEvent", "TransferLedger", "Timer", "ledger",
     "HOST", "BandwidthModel", "Location",
     "PagedKVPool", "gather_kv", "init_pool_arrays", "write_token",

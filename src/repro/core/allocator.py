@@ -58,7 +58,17 @@ class Extent:
 
 
 class _AllocatorBase:
-    """Shared bookkeeping: capacity, counters for benchmarks."""
+    """Shared bookkeeping: capacity, counters for benchmarks.
+
+    Eviction support (ISSUE 2): ``alloc`` accepts an optional opaque
+    ``tag`` (the owning buffer identity, set by the eviction engine in
+    :mod:`repro.core.hete`); :meth:`tags` exposes the live
+    ``offset → tag`` map so pressure diagnostics can attribute every
+    resident extent.  ``n_coalesces`` counts free-list merges and
+    :meth:`largest_free` reports the biggest contiguous hole — together
+    they tell whether an :class:`AllocError` under pressure means "full"
+    or "fragmented".
+    """
 
     def __init__(self, capacity: int) -> None:
         if capacity <= 0:
@@ -69,9 +79,11 @@ class _AllocatorBase:
         self.n_allocs = 0
         self.n_frees = 0
         self.n_steps = 0  # search steps taken (comparisons / node visits)
+        self.n_coalesces = 0  # free-list merges performed on free()
+        self._tags: dict = {}  # offset -> opaque per-extent metadata
 
     # --- interface -----------------------------------------------------
-    def alloc(self, nbytes: int) -> Extent:  # pragma: no cover - abstract
+    def alloc(self, nbytes: int, tag=None) -> Extent:  # pragma: no cover
         raise NotImplementedError
 
     def free(self, extent: Extent) -> None:  # pragma: no cover - abstract
@@ -80,12 +92,30 @@ class _AllocatorBase:
     def metadata_bytes(self) -> int:  # pragma: no cover - abstract
         raise NotImplementedError
 
+    def largest_free(self) -> int:  # pragma: no cover - abstract
+        raise NotImplementedError
+
     @property
     def free_bytes(self) -> int:
         return self.capacity - self.used_bytes
 
+    def tags(self) -> dict:
+        """Live ``offset → tag`` map for resident extents."""
+        return dict(self._tags)
+
+    def frag_stats(self) -> dict:
+        """Fragmentation evidence for pressure diagnostics."""
+        largest = self.largest_free()
+        return {
+            "free_bytes": self.free_bytes,
+            "largest_free": largest,
+            "frag_ratio": 0.0 if not self.free_bytes
+            else 1.0 - largest / self.free_bytes,
+            "n_coalesces": self.n_coalesces,
+        }
+
     def reset_counters(self) -> None:
-        self.n_allocs = self.n_frees = self.n_steps = 0
+        self.n_allocs = self.n_frees = self.n_steps = self.n_coalesces = 0
 
 
 class BitsetAllocator(_AllocatorBase):
@@ -126,7 +156,7 @@ class BitsetAllocator(_AllocatorBase):
         return (g & -g).bit_length() - 1
 
     # -- interface -------------------------------------------------------
-    def alloc(self, nbytes: int) -> Extent:
+    def alloc(self, nbytes: int, tag=None) -> Extent:
         if nbytes <= 0:
             raise ValueError(f"alloc size must be positive, got {nbytes}")
         k = (nbytes + self.block_size - 1) // self.block_size
@@ -141,6 +171,8 @@ class BitsetAllocator(_AllocatorBase):
         self.n_allocs += 1
         size = k * self.block_size
         self.used_bytes += size
+        if tag is not None:
+            self._tags[idx * self.block_size] = tag
         return Extent(idx * self.block_size, size)
 
     def free(self, extent: Extent) -> None:
@@ -154,9 +186,36 @@ class BitsetAllocator(_AllocatorBase):
         self._bits &= ~run_mask
         self.n_frees += 1
         self.used_bytes -= extent.size
+        self._tags.pop(extent.offset, None)
 
     def metadata_bytes(self) -> int:
         return (self.n_blocks + 7) // 8  # 1 bit per block
+
+    def largest_free(self) -> int:
+        """Largest contiguous free run in bytes (shift-doubling probe)."""
+        g = ~self._bits & self._full_mask
+        if g == 0:
+            return 0
+        # Binary-search the largest k with a surviving run: double until
+        # extinction, then the last surviving mask's run length is exact
+        # enough for diagnostics (lower bound within 2×); refine linearly.
+        k = 1
+        cur = g
+        while True:
+            nxt = cur & (cur >> k)
+            if nxt == 0:
+                break
+            cur = nxt
+            k *= 2
+        # cur holds runs of length k; extend one block at a time
+        n = k
+        while True:
+            nxt = cur & (g >> n)
+            if nxt == 0:
+                break
+            cur = nxt
+            n += 1
+        return n * self.block_size
 
 
 @dataclasses.dataclass
@@ -187,18 +246,21 @@ class NextFitAllocator(_AllocatorBase):
         self._by_offset = {0: head}
 
     # -- interface -------------------------------------------------------
-    def alloc(self, nbytes: int) -> Extent:
+    def alloc(self, nbytes: int, tag=None) -> Extent:
         if nbytes <= 0:
             raise ValueError(f"alloc size must be positive, got {nbytes}")
         seg = self._cursor
         for _ in range(self._n_segs):
             self.n_steps += 1
             if not seg.used and seg.size >= nbytes:
-                return self._take(seg, nbytes)
+                ext = self._take(seg, nbytes)
+                if tag is not None:
+                    self._tags[ext.offset] = tag
+                return ext
             seg = seg.next
         raise AllocError(
             f"next-fit arena exhausted: need {nbytes} B, "
-            f"free {self.free_bytes} B (fragmented)"
+            f"free {self.free_bytes} B (largest hole {self.largest_free()} B)"
         )
 
     def _take(self, seg: _Seg, nbytes: int) -> Extent:
@@ -227,6 +289,7 @@ class NextFitAllocator(_AllocatorBase):
         seg.used = False
         self.n_frees += 1
         self.used_bytes -= seg.size
+        self._tags.pop(extent.offset, None)
         # Coalesce with next, then prev (watching the circular wrap).
         nxt = seg.next
         if nxt is not seg and not nxt.used and nxt.offset == seg.offset + seg.size:
@@ -244,9 +307,20 @@ class NextFitAllocator(_AllocatorBase):
         right.next.prev = left
         del self._by_offset[right.offset]
         self._n_segs -= 1
+        self.n_coalesces += 1
 
     def metadata_bytes(self) -> int:
         return self._n_segs * self.BYTES_PER_ENTRY
+
+    def largest_free(self) -> int:
+        """Largest free segment in bytes (free list is always coalesced)."""
+        largest = 0
+        seg = self._head
+        for _ in range(self._n_segs):
+            if not seg.used and seg.size > largest:
+                largest = seg.size
+            seg = seg.next
+        return largest
 
     # -- introspection (tests / benchmarks) ------------------------------
     def segments(self) -> list[tuple[int, int, bool]]:

@@ -1,15 +1,27 @@
-"""Async task-graph executor: per-PE workers, prefetch, HEFT-lite.
+"""Async task-graph executor: persistent per-PE workers, prefetch, HEFT-lite.
 
 This is the runtime half of the ISSUE-1 subsystem (the DAG half lives in
 :mod:`repro.core.graph`).  Execution model:
 
-* one worker thread per PE, fed by a FIFO queue — same-PE tasks
-  serialize, different PEs run concurrently;
+* a **persistent** :class:`WorkerPool` — one worker thread per PE plus a
+  transfer pool — owned by the :class:`~repro.core.runtime.Runtime` and
+  reused across ``run_graph`` calls (ISSUE 2): repeated graph launches
+  pay no thread setup/teardown;
 * **input prefetch**: the moment a task's dependencies complete, its
   input staging (``hete_Data`` flag checks + src→PE copies) is submitted
-  to a transfer pool, so the copy overlaps whatever the target PE is
+  to the transfer pool, so the copy overlaps whatever the target PE is
   still computing — the paper's §3.2.2 premise (the runtime knows where
   valid bytes live) finally buys wall-clock, not just copy counts;
+* **capacity-aware prefetch** (ISSUE 2): inputs of every scheduled-but-
+  incomplete task are *protected* in the :class:`HeteContext`; prefetch
+  staging runs under the context's prefetch guard, so it never evicts
+  bytes a queued task still reads — if a reservation would require that,
+  the prefetch defers (:class:`~repro.core.hete.PrefetchDeferred`).
+  Prefetch is pin-free *speculative warming*: the PE worker re-stages
+  authoritatively (with hard pins) before executing — a free flag hit
+  when the warmed bytes survived, a demand fetch otherwise — so
+  concurrent prefetches can never pin an arena full and starve a
+  worker's reservation;
 * scheduling: ``round_robin`` (static, bit-identical to serial dispatch),
   ``data_affinity`` (dynamic, flag-aware), or ``heft`` — a HEFT-lite
   list scheduler that ranks ready tasks by upward rank and places each on
@@ -19,9 +31,9 @@ This is the runtime half of the ISSUE-1 subsystem (the DAG half lives in
 
 Because every PE here is emulated on one physical CPU, the *measured*
 wall clock understates the win; the executor therefore also simulates
-the schedule it actually executed (modeled transfer seconds + measured
-kernel seconds) and reports a modeled makespan, directly comparable to
-the serial :meth:`Runtime.run` modeled makespan.
+the schedule it actually executed (modeled transfer + spill-stall
+seconds + static compute estimates) and reports a modeled makespan,
+directly comparable to the serial :meth:`Runtime.run` modeled makespan.
 """
 
 from __future__ import annotations
@@ -33,20 +45,92 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, TYPE_CHECKING
 
 from .graph import TaskGraph, TaskNode, build_graph
+from .hete import PrefetchDeferred
 from .instrument import Timeline, TimelineEvent
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycle
     from .runtime import PE, Runtime, Task
 
-__all__ = ["GraphExecutor"]
+__all__ = ["GraphExecutor", "WorkerPool"]
 
-_SENTINEL = None
+_SHUTDOWN = None
+
+
+class WorkerPool:
+    """Persistent per-PE worker threads + transfer pool (ISSUE 2).
+
+    Lives on the :class:`Runtime` and is reused by every ``run_graph``
+    call; each queue item is ``(executor_run, payload)`` so the same
+    threads serve successive runs.  ``shutdown`` is only needed for
+    explicit teardown — threads are daemons.
+    """
+
+    def __init__(self, pes: Sequence["PE"]) -> None:
+        self.pe_names = tuple(pe.name for pe in pes)
+        self.queues: Dict[str, "queue.Queue"] = {
+            pe.name: queue.Queue() for pe in pes
+        }
+        self.transfer = ThreadPoolExecutor(
+            max_workers=max(2, len(pes)), thread_name_prefix="rimms-xfer",
+        )
+        self.runs_served = 0
+        self._threads = [
+            threading.Thread(
+                target=self._loop, args=(pe,), name=f"rimms-{pe.name}",
+                daemon=True,
+            )
+            for pe in pes
+        ]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, run: "GraphExecutor", pe_name: str, payload) -> None:
+        self.queues[pe_name].put((run, payload))
+
+    def _loop(self, pe: "PE") -> None:
+        q = self.queues[pe.name]
+        while True:
+            item = q.get()
+            if item is _SHUTDOWN:
+                return
+            run, payload = item
+            run._process(pe, payload)
+
+    def drain(self, run: "GraphExecutor") -> list:
+        """Pop every queued payload belonging to ``run`` (run teardown;
+        no other run is active on this pool by construction)."""
+        out = []
+        for q in self.queues.values():
+            while True:
+                try:
+                    item = q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is _SHUTDOWN:
+                    q.put(item)  # preserve shutdown signal
+                    break
+                if item[0] is run:
+                    out.append(item[1])
+                else:  # pragma: no cover - defensive; runs never overlap
+                    q.put(item)
+                    break
+        return out
+
+    def shutdown(self) -> None:
+        for q in self.queues.values():
+            q.put(_SHUTDOWN)
+        # Join so no daemon thread is left inside a JAX/XLA call at
+        # interpreter teardown (std::terminate on some builds).
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self.transfer.shutdown(wait=True)
 
 
 def _reap_future(fut: Optional[Future]) -> None:
     """Cancel an abandoned prefetch future, or — if it already started —
     wait and swallow its outcome so staging errors are never left
-    unretrieved."""
+    unretrieved.  Prefetch staging is pin-free speculative warming, so
+    there is nothing else to release."""
     if fut is not None and not fut.cancel():
         try:
             fut.exception()
@@ -90,9 +174,11 @@ class GraphExecutor:
         self._model_finish: Dict[int, float] = {}
         self._pe_model: Dict[str, float] = {pe.name: 0.0 for pe in rt.pes}
         self._sched_avail: Dict[str, float] = {pe.name: 0.0 for pe in rt.pes}
-        self._queues: Dict[str, "queue.Queue"] = {
-            pe.name: queue.Queue() for pe in rt.pes
-        }
+        # run lifecycle: late items (after teardown) are abandoned, and
+        # teardown waits until in-flight items leave the workers
+        self._finished = False
+        self._inflight = 0
+        self._quiet = threading.Condition()
 
         if self.scheduler == "heft":
             self._rank(graph)
@@ -102,50 +188,31 @@ class GraphExecutor:
         if self.scheduler == "round_robin":
             self._static = [rt._schedule(n.task) for n in graph.nodes]
 
-        self._pool = (
-            ThreadPoolExecutor(
-                max_workers=max(2, len(rt.pes)),
-                thread_name_prefix="rimms-xfer",
-            )
-            if self.prefetch
-            else None
-        )
-        workers = [
-            threading.Thread(
-                target=self._worker, args=(pe,), name=f"rimms-{pe.name}",
-                daemon=True,
-            )
-            for pe in rt.pes
-        ]
+        pool = rt._get_worker_pool()
+        pool.runs_served += 1
+        self._pool = pool
 
         self._t0 = time.perf_counter()
-        for w in workers:
-            w.start()
         try:
             with self._lock:
                 ready = [n.index for n in graph.nodes if not n.deps]
                 self._schedule_ready(ready)
             self._done.wait()
         finally:
-            for q in self._queues.values():
-                q.put(_SENTINEL)
-            for w in workers:
-                w.join()
-            # Reap items abandoned on any queue (a failing worker exits
-            # without draining; racing completions can enqueue behind the
-            # sentinel): cancel their prefetch futures so no staging runs
-            # — or leaves an unretrieved error — after the run ended.
-            for q in self._queues.values():
-                while True:
-                    try:
-                        item = q.get_nowait()
-                    except queue.Empty:
-                        break
-                    if item is _SENTINEL:
-                        continue
-                    _reap_future(item[2])
-            if self._pool is not None:
-                self._pool.shutdown(wait=True)
+            with self._quiet:
+                self._finished = True
+                # Wait out in-flight workers FIRST: a completing peer can
+                # still enqueue dependents and prefetch futures (failure
+                # teardown); only after quiescence is the queue content
+                # final.
+                while self._inflight:
+                    self._quiet.wait()
+            # Reap items abandoned on any queue: cancel their prefetch
+            # futures — or wait out started ones — and release their pins
+            # and protection, so no staging outlives the run unaccounted.
+            # (Workers popping later see _finished and abandon likewise.)
+            for payload in pool.drain(self):
+                self._abandon(payload)
         wall = time.perf_counter() - self._t0
         if self._error is not None:
             raise self._error
@@ -193,52 +260,124 @@ class GraphExecutor:
 
     def _schedule_ready(self, indices: List[int]) -> None:
         """Assign + enqueue newly-ready nodes (under the state lock).
-        HEFT processes the batch highest-upward-rank first."""
+        HEFT processes the batch highest-upward-rank first.  Each node's
+        inputs are protected at its PE until completion — the contract
+        behind capacity-aware prefetch."""
         nodes = self._graph.nodes
+        ctx = self.rt.context
         if self.scheduler == "heft":
             indices = sorted(indices, key=lambda i: -nodes[i].rank)
         for i in indices:
             node = nodes[i]
             pe = self._static[i] if self._static is not None else self._pick_pe(node)
+            for hd in node.task.inputs:
+                ctx.protect(hd, pe.location)
             fut: Optional[Future] = None
-            if self._pool is not None:
+            if self.prefetch:
                 # Prefetch: stage inputs now, possibly while `pe` is still
                 # busy with an earlier task — transfer/compute overlap.
-                fut = self._pool.submit(self.rt._stage_inputs, node.task, pe)
-            self._queues[pe.name].put((i, pe, fut))
+                fut = self._pool.transfer.submit(
+                    self._prefetch_stage, node.task, pe
+                )
+            self._pool.submit(self, pe.name, (i, pe, fut))
+
+    def _prefetch_stage(self, task: "Task", pe: "PE"):
+        """Speculative pin-free staging on the transfer pool.  Returns
+        ``(staged, eviction_epochs)`` — the worker reuses ``staged`` only
+        if every input root's eviction epoch is unchanged once pinned —
+        or None when capacity pressure defers to demand staging (never
+        evicting bytes another queued task still reads)."""
+        try:
+            staged = self.rt._stage_inputs(task, pe, prefetch=True)
+        except PrefetchDeferred:
+            return None
+        return staged, tuple(hd.root.eviction_epoch for hd in task.inputs)
 
     # -- workers ------------------------------------------------------------
-    def _worker(self, pe: "PE") -> None:
-        rt, q = self.rt, self._queues[pe.name]
-        while True:
-            item = q.get()
-            if item is _SENTINEL:
-                return
+    def _process(self, pe: "PE", payload: tuple) -> None:
+        """Execute one queued payload on its PE worker thread.  Called by
+        the persistent pool; must never kill the worker thread."""
+        with self._quiet:
+            if self._finished:
+                live = False
+            else:
+                live = True
+                self._inflight += 1
+        if not live:
+            self._abandon(payload)
+            return
+        try:
             if self._error is not None:
-                # Drain without executing: a peer already failed.
-                _reap_future(item[2])
-                continue
-            i, pe_assigned, fut = item
+                # A peer already failed: drain without executing.
+                self._abandon(payload)
+                return
+            i, pe_assigned, fut = payload
             node = self._graph.nodes[i]
+            unprotected = False
             try:
                 w0 = time.perf_counter()
-                if fut is not None:
-                    ins, tr_s = fut.result()
-                else:
-                    ins, tr_s = rt._stage_inputs(node.task, pe_assigned)
-                outs, comp_s = rt._run_kernel(node.task, pe_assigned, ins)
-                out_s = rt._commit_outputs(node.task, pe_assigned, outs)
+                pre = fut.result() if fut is not None else None
+                loc = pe_assigned.location
+                staged = None
+                if pre is not None:
+                    # Pin first, then validate: once pinned the inputs
+                    # cannot be evicted, so unchanged eviction epochs
+                    # prove the prefetched staging is still current.
+                    pre_staged, epochs = pre
+                    self.rt._pin_inputs(node.task, loc)
+                    if all(hd.root.eviction_epoch == ep for hd, ep in
+                           zip(node.task.inputs, epochs)):
+                        staged = pre_staged
+                    else:  # pressure evicted warmed bytes: stage on demand
+                        self.rt._unpin_inputs(node.task, loc)
+                if staged is None:
+                    # no prefetch, prefetch deferred, or warmed bytes
+                    # evicted — authoritative pinned staging
+                    staged = self.rt._stage_inputs(node.task, pe_assigned)
+                    if pre is not None:  # account the wasted warm-up too
+                        staged = (staged[0], staged[1] + pre[0][1],
+                                  staged[2] + pre[0][2])
+                ins, tr_s, sp_s = staged
+                try:
+                    outs, comp_s = self.rt._run_kernel(node.task, pe_assigned, ins)
+                    out_s, sp2_s = self.rt._commit_outputs(
+                        node.task, pe_assigned, outs
+                    )
+                finally:
+                    self.rt._unpin_inputs(node.task, pe_assigned.location)
                 w1 = time.perf_counter()
+                # This task no longer reads its inputs: release the
+                # queued-reader claim exactly once, before dependents are
+                # scheduled (inside _complete).
+                self._unprotect(node, pe_assigned)
+                unprotected = True
                 # _complete can itself raise while scheduling newly-ready
                 # dependents (unknown pin, op with no eligible PE) — it
                 # must stay inside the except so the run never hangs.
-                self._complete(node, pe_assigned, w0, w1, tr_s, comp_s, out_s)
+                self._complete(node, pe_assigned, w0, w1, tr_s,
+                               sp_s + sp2_s, comp_s, out_s)
             except BaseException as e:  # surface to the caller, stop the run
                 with self._lock:
                     if self._error is None:
                         self._error = e
+                if not unprotected:
+                    self._unprotect(node, pe_assigned)
                 self._done.set()
-                return
+        finally:
+            with self._quiet:
+                self._inflight -= 1
+                self._quiet.notify_all()
+
+    def _unprotect(self, node: TaskNode, pe: "PE") -> None:
+        for hd in node.task.inputs:
+            self.rt.context.unprotect(hd, pe.location)
+
+    def _abandon(self, payload: tuple) -> None:
+        """Release claims of a payload that will never execute: reap its
+        prefetch future and drop the queued-reader protection."""
+        i, pe, fut = payload
+        _reap_future(fut)
+        self._unprotect(self._graph.nodes[i], pe)
 
     def _complete(
         self,
@@ -247,6 +386,7 @@ class GraphExecutor:
         w0: float,
         w1: float,
         tr_s: float,
+        spill_s: float,
         comp_s: float,
         out_s: float,
     ) -> None:
@@ -255,7 +395,7 @@ class GraphExecutor:
             # Schedule simulation: this task's transfers could start once
             # its inputs existed (ready_m), overlapping the PE's previous
             # compute; its compute starts when both the PE and the staged
-            # inputs are available.
+            # inputs are available.  Spill stalls extend staging.
             ready_m = max(
                 (self._model_finish.get(d, 0.0) for d in node.deps), default=0.0
             )
@@ -265,16 +405,18 @@ class GraphExecutor:
             comp_m = rt.cost_model.prior_estimate(
                 node.task.op, pe.kind, node.task.in_bytes
             )
-            compute_start_m = max(self._pe_model[pe.name], ready_m + tr_s)
+            stage_s = tr_s + spill_s
+            compute_start_m = max(self._pe_model[pe.name], ready_m + stage_s)
             finish_m = compute_start_m + comp_m + out_s
             self._pe_model[pe.name] = finish_m
             self._model_finish[node.index] = finish_m
             rt.timeline.add(TimelineEvent(
                 task=node.name, pe=pe.name,
                 wall_start=w0 - self._t0, wall_end=w1 - self._t0,
-                model_start=max(ready_m, compute_start_m - tr_s),
+                model_start=max(ready_m, compute_start_m - stage_s),
                 model_end=finish_m,
                 transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
+                spill_s=spill_s,
             ))
             rt.task_log.append((node.name, pe.name))
             self._completed += 1
@@ -283,7 +425,9 @@ class GraphExecutor:
                 self._remaining[s] -= 1
                 if self._remaining[s] == 0:
                     newly_ready.append(s)
-            if newly_ready:
+            # A peer failed: the run is tearing down — don't feed new
+            # work (or prefetch staging) into a dying run.
+            if newly_ready and self._error is None:
                 self._schedule_ready(newly_ready)
             if self._completed == len(self._graph):
                 self._done.set()
@@ -294,6 +438,7 @@ class GraphExecutor:
         per_pe: Dict[str, float] = {}
         for ev in rt.timeline.events():
             per_pe[ev.pe] = per_pe.get(ev.pe, 0.0) + (ev.model_end - ev.model_start)
+        ledger = rt.context.ledger
         return {
             "wall_s": wall,
             "makespan_model": rt.last_makespan_model,
@@ -305,4 +450,7 @@ class GraphExecutor:
             "prefetch": self.prefetch,
             "per_pe_busy_model_s": per_pe,
             "timeline": rt.timeline,
+            "spill_stall_model_s": rt.timeline.total_spill_s,
+            "evictions": ledger.total_evictions,
+            "prefetch_deferrals": ledger.prefetch_deferrals,
         }

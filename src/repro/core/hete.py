@@ -27,10 +27,23 @@ Thread safety: each :class:`HeteData` carries a lock serializing
 ``ensure``/``mark_written`` on that buffer, and arena reservations go
 through a context-wide lock — the graph executor stages inputs from a
 transfer pool concurrently with PE workers committing outputs.
+
+Capacity pressure (ISSUE 2): device arenas behave like a managed cache
+over host memory.  When a reservation cannot be satisfied, the context
+selects victims among the space's resident buffers — cost-aware LRU over
+an access clock touched on every flag check, never a pinned buffer —
+writes dirty bytes back to host *through the existing coherence paths*
+(fragment aliasing preserved), frees their extents and retries.
+``AllocError`` surfaces only when the pinned working set genuinely
+exceeds capacity.  ``pin``/``unpin`` (and the ``pinned`` context
+manager) bound eviction; the graph executor additionally *protects*
+bytes that queued tasks still read so prefetch never spills them
+(prefetch under pressure defers instead — :class:`PrefetchDeferred`).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -46,11 +59,20 @@ __all__ = [
     "HeteData",
     "MemorySpace",
     "HeteContext",
+    "PrefetchDeferred",
     "default_context",
     "hete_malloc",
     "hete_free",
     "hete_sync",
 ]
+
+
+class PrefetchDeferred(Exception):
+    """Raised inside a :meth:`HeteContext.prefetch_guard` scope when a
+    reservation would have to evict pinned or *protected* bytes (bytes a
+    queued task still reads).  The graph executor catches it and falls
+    back to staging on the PE worker at execute time, when earlier tasks
+    have released their claims."""
 
 
 class MemorySpace:
@@ -76,6 +98,8 @@ class MemorySpace:
         self.arena = (
             make_allocator(allocator, capacity, block_size) if capacity else None
         )
+        # id(root) -> root HeteData holding an extent here (eviction pool)
+        self.residents: Dict[int, "HeteData"] = {}
         self._ingest = ingest
         self._egress = egress
 
@@ -108,6 +132,12 @@ class HeteData:
     fragments: Optional[List["HeteData"]] = None
     # beyond-paper read-replica cache; faithful mode ignores it
     valid_at: set = dataclasses.field(default_factory=set)
+    # capacity-pressure state (kept on the ROOT allocation; fragments
+    # delegate): eviction refcounts + access clock per location, and a
+    # monotonic eviction epoch (prefetched stagings revalidate against it)
+    pins: Dict[Location, int] = dataclasses.field(default_factory=dict)
+    last_touch: Dict[Location, int] = dataclasses.field(default_factory=dict)
+    eviction_epoch: int = 0
     freed: bool = False
     # set when a fragment was written since the parent's copy was last
     # coherent — a whole-parent read gathers fragments first (see
@@ -150,6 +180,28 @@ class HeteData:
         """The top-level allocation this buffer belongs to (self if not a
         fragment)."""
         return self.parent if self.parent is not None else self
+
+    # -- capacity pressure (ISSUE 2) ---------------------------------------
+    def pin(self, loc: Location) -> None:
+        """Make this buffer's root allocation non-evictable at ``loc``
+        (refcounted).  Pinning does not force residency — it only bounds
+        eviction while the count is non-zero."""
+        self.context.pin(self, loc)
+
+    def unpin(self, loc: Location) -> None:
+        self.context.unpin(self, loc)
+
+    def pin_count(self, loc: Location) -> int:
+        return self.root.pins.get(loc, 0)
+
+    @contextlib.contextmanager
+    def pinned(self, loc: Location):
+        """``with hd.pinned(dev): ...`` — eviction-safe scope at ``loc``."""
+        self.pin(loc)
+        try:
+            yield self
+        finally:
+            self.unpin(loc)
 
     def byte_interval(self) -> Tuple[int, int]:
         """``[lo, hi)`` byte range inside :attr:`root`'s allocation —
@@ -227,11 +279,80 @@ class HeteContext:
         self.ledger = ledger if ledger is not None else TransferLedger()
         self.spaces: Dict[Location, MemorySpace] = {HOST: MemorySpace(HOST)}
         self._arena_lock = threading.RLock()
+        # -- capacity pressure (ISSUE 2) --
+        self._clock = 0  # monotonic access clock (approximate under races)
+        # (id(root), loc) -> refcount of queued graph tasks reading those
+        # bytes; prefetch staging must not evict them (executor-managed)
+        self._protected: Dict[Tuple[int, Location], int] = {}
+        self._tls = threading.local()  # .strict, .spill_s
 
     # -- registry ----------------------------------------------------------
     def register_space(self, space: MemorySpace) -> MemorySpace:
         self.spaces[space.location] = space
         return space
+
+    # -- pins / protection (ISSUE 2) ----------------------------------------
+    def pin(self, hd: HeteData, loc: Location) -> None:
+        root = hd.root
+        with self._arena_lock:
+            root.pins[loc] = root.pins.get(loc, 0) + 1
+
+    def unpin(self, hd: HeteData, loc: Location) -> None:
+        root = hd.root
+        with self._arena_lock:
+            n = root.pins.get(loc, 0)
+            if n <= 0:
+                raise ValueError(f"unpin without matching pin at {loc}")
+            if n == 1:
+                root.pins.pop(loc)
+            else:
+                root.pins[loc] = n - 1
+
+    def protect(self, hd: HeteData, loc: Location) -> None:
+        """Refcounted *soft* claim: a queued task still reads these bytes
+        at ``loc``.  Prefetch-triggered eviction (inside
+        :meth:`prefetch_guard`) refuses protected victims; demand staging
+        on a PE worker may still evict them (the reader re-fetches)."""
+        key = (id(hd.root), loc)
+        with self._arena_lock:
+            self._protected[key] = self._protected.get(key, 0) + 1
+
+    def unprotect(self, hd: HeteData, loc: Location) -> None:
+        key = (id(hd.root), loc)
+        with self._arena_lock:
+            n = self._protected.get(key, 0)
+            if n <= 1:
+                self._protected.pop(key, None)
+            else:
+                self._protected[key] = n - 1
+
+    @contextlib.contextmanager
+    def prefetch_guard(self):
+        """Scope for speculative staging (the executor's transfer pool):
+        a reservation that would have to evict pinned or protected bytes
+        raises :class:`PrefetchDeferred` instead of spilling them."""
+        prev = getattr(self._tls, "strict", False)
+        self._tls.strict = True
+        try:
+            yield self
+        finally:
+            self._tls.strict = prev
+
+    def take_spill_seconds(self) -> float:
+        """Modeled eviction write-back seconds accumulated by THIS thread
+        since the last call (spill-stall attribution for the Timeline)."""
+        s = getattr(self._tls, "spill_s", 0.0)
+        self._tls.spill_s = 0.0
+        return s
+
+    def _spill_add(self, seconds: float) -> None:
+        self._tls.spill_s = getattr(self._tls, "spill_s", 0.0) + seconds
+
+    def _touch(self, root: HeteData, loc: Location) -> None:
+        # Approximate LRU clock: racy increments lose ticks, which only
+        # coarsens victim order — never correctness.
+        self._clock += 1
+        root.last_touch[loc] = self._clock
 
     # -- the three hardware-agnostic APIs (§3.2.1) ---------------------------
     def malloc(
@@ -273,7 +394,9 @@ class HeteContext:
                 space = self.spaces[loc]
                 if space.arena is not None:
                     space.arena.free(ext)
+                space.residents.pop(id(hd), None)
             hd.extents.clear()
+            hd.pins.clear()
         hd.copies.clear()
         hd.valid_at.clear()
         hd.freed = True
@@ -287,7 +410,13 @@ class HeteContext:
         """Reserve an extent for ``hd``'s root allocation in ``loc``'s
         arena on first materialization there (no-op for spaces without a
         capacity arena).  Fragments charge their parent's full extent —
-        one arena search covers all n fragments (§3.2.3)."""
+        one arena search covers all n fragments (§3.2.3).
+
+        Under pressure this is the evict-retry loop (ISSUE 2): each
+        failed allocation evicts one victim (cost-aware LRU) and retries;
+        ``AllocError`` surfaces only when nothing is evictable — i.e. the
+        pinned (or, inside :meth:`prefetch_guard`, pinned+protected)
+        working set genuinely exceeds capacity."""
         root = hd.root
         space = self.spaces[loc]
         if space.arena is None:
@@ -295,15 +424,153 @@ class HeteContext:
         with self._arena_lock:
             if loc in root.extents:
                 return
-            try:
-                root.extents[loc] = space.arena.alloc(root.nbytes)
-            except AllocError as e:
-                raise AllocError(
-                    f"memory space {loc} exhausted: cannot reserve "
-                    f"{root.nbytes} B for buffer shape={root.shape} "
-                    f"({space.arena.free_bytes} B free of "
-                    f"{space.arena.capacity} B): {e}"
-                ) from e
+            stalled = False
+            skip: set = set()  # victims whose eviction failed (in use)
+            while True:
+                try:
+                    ext = space.arena.alloc(root.nbytes, tag=id(root))
+                except AllocError as e:
+                    victim = self._select_victim(space, loc, exclude=root,
+                                                 skip=skip)
+                    if victim is None:
+                        if getattr(self._tls, "strict", False):
+                            self.ledger.record_prefetch_deferral()
+                            raise PrefetchDeferred(
+                                f"prefetch to {loc} deferred: reserving "
+                                f"{root.nbytes} B would evict pinned or "
+                                f"still-queued bytes"
+                            ) from e
+                        pinned = sum(
+                            r.nbytes for r in space.residents.values()
+                            if r.pins.get(loc, 0) > 0
+                        )
+                        raise AllocError(
+                            f"memory space {loc} exhausted: cannot reserve "
+                            f"{root.nbytes} B for buffer shape={root.shape} "
+                            f"({space.arena.free_bytes} B free of "
+                            f"{space.arena.capacity} B, {pinned} B pinned, "
+                            f"nothing evictable): {e}"
+                        ) from e
+                    if not stalled:
+                        stalled = True
+                        self.ledger.record_spill_stall()
+                    if not self._evict_locked(victim, loc):
+                        skip.add(id(victim))  # in active use; try others
+                    continue
+                root.extents[loc] = ext
+                space.residents[id(root)] = root
+                self._touch(root, loc)
+                return
+
+    # -- eviction engine (ISSUE 2) -------------------------------------------
+    def _select_victim(self, space: MemorySpace, loc: Location,
+                       exclude: HeteData,
+                       skip: frozenset = frozenset()) -> Optional[HeteData]:
+        """Cost-aware LRU victim pick, called under the arena lock.
+
+        Candidates: resident roots that are not the buffer being
+        reserved, not pinned, and — inside :meth:`prefetch_guard` — not
+        protected by a queued reader.  A candidate whose lock is held by
+        another thread is in active use and skipped (non-blocking probe,
+        which also makes eviction deadlock-free).  Order: least recent
+        access first; ties broken by the modeled cost of the round trip
+        the eviction causes (write-back now if dirty + re-fetch later),
+        normalized per byte freed, then by id for determinism.
+        """
+        strict = getattr(self._tls, "strict", False)
+        bw = self.ledger.bandwidth_model
+        best, best_key = None, None
+        for rid, cand in space.residents.items():
+            if cand is exclude.root or rid in skip or cand.pins.get(loc, 0) > 0:
+                continue
+            if strict and self._protected.get((rid, loc), 0) > 0:
+                continue
+            dirty = self._dirty_bytes(cand, loc)
+            cost_s = bw.seconds(HOST, loc, cand.nbytes)
+            if dirty:
+                cost_s += bw.seconds(loc, HOST, dirty)
+            key = (cand.last_touch.get(loc, 0), cost_s / max(cand.nbytes, 1),
+                   rid)
+            if best_key is None or key < best_key:
+                best, best_key = cand, key
+        return best
+
+    @staticmethod
+    def _dirty_bytes(root: HeteData, loc: Location) -> int:
+        """Bytes at ``loc`` not yet reflected in the host copy."""
+        if root.fragments:
+            return sum(f.nbytes for f in root.fragments
+                       if f.last_location == loc)
+        return root.nbytes if root.last_location == loc else 0
+
+    def _evict_locked(self, root: HeteData, loc: Location) -> bool:
+        """Evict ``root`` from ``loc``: write dirty bytes back to host via
+        the normal coherence paths (fragment aliasing preserved), drop the
+        device materializations, free the extent.  Called under the arena
+        lock; probes the buffer locks (root + every fragment) without
+        blocking — a contended lock means the buffer is in active use by
+        another thread, so the caller skips this victim.  The probe is
+        what keeps eviction deadlock-free: no thread ever blocks on a
+        buffer lock while holding the arena lock."""
+        held = []
+        for owner in [root] + list(root.fragments or ()):
+            if not owner.lock.acquire(blocking=False):
+                for h in held:
+                    h.lock.release()
+                return False
+            held.append(owner)
+        try:
+            space = self.spaces[loc]
+            ext = root.extents.get(loc)
+            if ext is None:
+                space.residents.pop(id(root), None)
+                return False
+            dirty = self._dirty_bytes(root, loc)
+            wb_s = 0.0
+            if dirty:
+                # stage() makes the host bytes current — a direct loc→host
+                # copy, or a per-fragment gather when fragments own the
+                # flag — recording the copies in the ledger as usual.
+                self.stage(root, HOST)
+                wb_s = self.ledger.bandwidth_model.seconds(loc, HOST, dirty)
+                self._spill_add(wb_s)
+            # Move flags off the doomed materialization (eviction is the
+            # one sanctioned flag move outside mark_written — host
+            # becomes the owning resource).  HOST joins valid_at only
+            # when the write-back actually made it current: a clean
+            # replica evicted while a *third* location owns the flag
+            # must not resurrect a stale host copy (cached tracking).
+            if root.last_location == loc:
+                root.last_location = HOST
+            root.valid_at.discard(loc)
+            if dirty:
+                root.valid_at.add(HOST)
+            root.copies.pop(loc, None)
+            for frag in root.fragments or ():
+                if frag.last_location == loc:
+                    frag.last_location = HOST
+                frag.valid_at.discard(loc)
+                if dirty:
+                    frag.valid_at.add(HOST)
+                frag.copies.pop(loc, None)
+            space.arena.free(ext)
+            del root.extents[loc]
+            space.residents.pop(id(root), None)
+            root.eviction_epoch += 1
+            self.ledger.record_eviction(loc, root.nbytes, dirty, wb_s)
+            return True
+        finally:
+            for h in held:
+                h.lock.release()
+
+    def evict(self, hd: HeteData, loc: Location) -> bool:
+        """Explicitly evict ``hd``'s root allocation from ``loc`` (tests /
+        manual spill).  Returns False if not resident, pinned, or in use."""
+        root = hd.root
+        with self._arena_lock:
+            if root.pins.get(loc, 0) > 0 or loc not in root.extents:
+                return False
+            return self._evict_locked(root, loc)
 
     # -- runtime-internal protocol (§3.2.2) ----------------------------------
     def ensure(self, hd: HeteData, dst: Location) -> Any:
@@ -327,14 +594,25 @@ class HeteContext:
         # task graph orders writers against readers: the flag cannot move
         # concurrently with this read.
         if hd.last_location == dst and not (hd.fragments and hd.frag_dirty):
-            return hd.copies[dst], 0.0
+            # .get(): eviction (which holds hd.lock, not taken here) may
+            # have moved the flag between the check and the read — fall
+            # through to the locked slow path, which re-stages.
+            value = hd.copies.get(dst)
+            if value is not None:
+                if dst != HOST:
+                    self._touch(hd.root, dst)  # access clock: LRU evidence
+                return value, 0.0
         with hd.lock:
             if hd.fragments and hd.frag_dirty:
                 self._gather_fragments(hd)
             src = hd.last_location
             if dst == src:
+                if dst != HOST:
+                    self._touch(hd.root, dst)
                 return hd.copies[dst], 0.0
             if self.tracking == "cached" and dst in hd.valid_at and dst in hd.copies:
+                if dst != HOST:
+                    self._touch(hd.root, dst)
                 return hd.copies[dst], 0.0
             if dst != HOST:
                 self._reserve(hd, dst)
@@ -349,6 +627,8 @@ class HeteContext:
                 moved = self.spaces[dst].ingest(host_np) if dst != HOST else host_np
                 hd.copies[dst] = moved
             hd.valid_at.add(dst)
+            if dst != HOST:
+                self._touch(hd.root, dst)
             self.ledger.record(src, dst, hd.nbytes)
             return moved, self.ledger.bandwidth_model.seconds(src, dst, hd.nbytes)
 
@@ -375,6 +655,8 @@ class HeteContext:
                 hd.copies[loc] = value
             hd.last_location = loc
             hd.valid_at = {loc}
+            if loc != HOST:
+                self._touch(hd.root, loc)
             if hd.parent is not None:
                 hd.parent.frag_dirty = True
             if hd.fragments:

@@ -27,7 +27,15 @@ __all__ = ["TransferLedger", "ledger", "Timer", "Timeline", "TimelineEvent"]
 
 @dataclasses.dataclass
 class TransferLedger:
-    """Counts copies and bytes per (src, dst) pair + modeled seconds."""
+    """Counts copies and bytes per (src, dst) pair + modeled seconds.
+
+    Capacity-pressure counters (ISSUE 2): every eviction a
+    :class:`~repro.core.hete.HeteContext` performs under arena pressure is
+    recorded here — how many, how many bytes were dirty (written back to
+    host through the coherence paths; those copies also appear in
+    :attr:`copies` as ``loc->host``), and how much modeled time staging
+    paths stalled on eviction write-backs (spill stalls).
+    """
 
     bandwidth_model: BandwidthModel = dataclasses.field(
         default_factory=lambda: DEFAULT_BANDWIDTH_MODEL
@@ -36,6 +44,13 @@ class TransferLedger:
     bytes_moved: Counter = dataclasses.field(default_factory=Counter)
     modeled_seconds: float = 0.0
     flag_checks: int = 0  # last-resource-flag checks (§5.2.2 microbench)
+    # -- capacity-pressure counters (ISSUE 2) --
+    evictions: Counter = dataclasses.field(default_factory=Counter)  # per loc
+    evicted_bytes: int = 0
+    writeback_bytes: int = 0  # dirty bytes written back to host on eviction
+    spill_stall_s: float = 0.0  # modeled seconds staging spent on write-backs
+    n_spill_stalls: int = 0  # alloc attempts that had to evict first
+    prefetch_deferrals: int = 0  # prefetches skipped to protect queued readers
     _lock: threading.RLock = dataclasses.field(
         default_factory=threading.RLock, repr=False, compare=False
     )
@@ -46,6 +61,22 @@ class TransferLedger:
             self.copies[key] += 1
             self.bytes_moved[key] += nbytes
             self.modeled_seconds += self.bandwidth_model.seconds(src, dst, nbytes)
+
+    def record_eviction(self, loc: Location, nbytes: int,
+                        writeback_bytes: int, stall_s: float) -> None:
+        with self._lock:
+            self.evictions[str(loc)] += 1
+            self.evicted_bytes += nbytes
+            self.writeback_bytes += writeback_bytes
+            self.spill_stall_s += stall_s
+
+    def record_spill_stall(self, n: int = 1) -> None:
+        with self._lock:
+            self.n_spill_stalls += n
+
+    def record_prefetch_deferral(self, n: int = 1) -> None:
+        with self._lock:
+            self.prefetch_deferrals += n
 
     def record_flag_check(self, n: int = 1) -> None:
         # Deliberately lock-free: this sits on the §5.2.2 flag-check hot
@@ -62,12 +93,22 @@ class TransferLedger:
     def total_bytes(self) -> int:
         return sum(self.bytes_moved.values())
 
+    @property
+    def total_evictions(self) -> int:
+        return sum(self.evictions.values())
+
     def reset(self) -> None:
         with self._lock:
             self.copies.clear()
             self.bytes_moved.clear()
             self.modeled_seconds = 0.0
             self.flag_checks = 0
+            self.evictions.clear()
+            self.evicted_bytes = 0
+            self.writeback_bytes = 0
+            self.spill_stall_s = 0.0
+            self.n_spill_stalls = 0
+            self.prefetch_deferrals = 0
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -79,6 +120,13 @@ class TransferLedger:
                 "by_pair": {
                     f"{s}->{d}": c for (s, d), c in sorted(self.copies.items())
                 },
+                "evictions": dict(sorted(self.evictions.items())),
+                "total_evictions": self.total_evictions,
+                "evicted_bytes": self.evicted_bytes,
+                "writeback_bytes": self.writeback_bytes,
+                "spill_stall_s": self.spill_stall_s,
+                "n_spill_stalls": self.n_spill_stalls,
+                "prefetch_deferrals": self.prefetch_deferrals,
             }
 
 
@@ -133,6 +181,7 @@ class TimelineEvent:
     transfer_s: float  # modeled input-staging seconds (0 on flag hits)
     compute_s: float  # measured kernel seconds
     out_transfer_s: float = 0.0  # modeled output writeback (reference policy)
+    spill_s: float = 0.0  # modeled eviction write-back stall during staging
 
 
 class Timeline:
@@ -158,6 +207,12 @@ class Timeline:
     def makespan_model(self) -> float:
         with self._lock:
             return max((e.model_end for e in self._events), default=0.0)
+
+    @property
+    def total_spill_s(self) -> float:
+        """Modeled seconds tasks stalled on eviction write-backs."""
+        with self._lock:
+            return sum(e.spill_s for e in self._events)
 
     def gantt(self, width: int = 72) -> str:
         """Render a text Gantt chart over modeled time, one row per PE."""

@@ -33,8 +33,10 @@ seconds under platform bandwidths).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -111,6 +113,28 @@ class Runtime:
         self.timeline = Timeline()  # replaced per run/run_graph
         self.last_makespan_model = 0.0
         self.last_report: Optional[Dict[str, Any]] = None  # set by run_graph
+        # persistent per-PE worker pool, created lazily by run_graph and
+        # reused across calls (ISSUE 2); close() releases it
+        self._worker_pool = None
+
+    def _get_worker_pool(self):
+        from .executor import WorkerPool  # local import: avoids cycle
+
+        if self._worker_pool is None:
+            pool = WorkerPool(self.pes)
+            self._worker_pool = pool
+            # release the pool's threads when this Runtime is collected
+            self._pool_finalizer = weakref.finalize(
+                self, WorkerPool.shutdown, pool
+            )
+        return self._worker_pool
+
+    def close(self) -> None:
+        """Release the persistent worker pool (idempotent)."""
+        if self._worker_pool is not None:
+            self._pool_finalizer.detach()
+            self._worker_pool.shutdown()
+            self._worker_pool = None
 
     # -- registration -------------------------------------------------------
     def register_kernel(self, op: str, pe_kind: str, fn: Callable) -> None:
@@ -167,32 +191,71 @@ class Runtime:
         return tr, self.cost_model.estimate(task.op, pe.kind, task.in_bytes)
 
     # -- stage → execute → commit (shared by serial and graph modes) ---------
-    def _stage_inputs(self, task: Task, pe: PE) -> Tuple[List[Any], float]:
+    def _pin_inputs(self, task: Task, loc: Location) -> None:
+        """Hard-pin every input's root at ``loc`` so eviction triggered by
+        a concurrent (or this task's own output) reservation can never
+        spill bytes the kernel is about to read.  Balanced by
+        :meth:`_unpin_inputs` after commit."""
+        for hd in task.inputs:
+            self.context.pin(hd, loc)
+
+    def _unpin_inputs(self, task: Task, loc: Location) -> None:
+        for hd in task.inputs:
+            self.context.unpin(hd, loc)
+
+    def _stage_inputs(
+        self, task: Task, pe: PE, *, prefetch: bool = False
+    ) -> Tuple[List[Any], float, float]:
         """Materialize ``task``'s inputs at ``pe`` under the memory policy.
-        Returns (input values, modeled transfer seconds actually spent)."""
+        Returns (input values, modeled transfer seconds, modeled seconds
+        stalled on eviction write-backs).
+
+        Demand mode (default): inputs stay hard-pinned at ``pe`` until
+        :meth:`_unpin_inputs` — callers release after commit.  Only one
+        PE worker reserves per arena, so pinned bytes are bounded by one
+        task's working set.
+
+        Prefetch mode: *speculative warming* — runs under the context's
+        prefetch guard (raises :class:`~repro.core.hete.PrefetchDeferred`
+        instead of evicting pinned/protected bytes) and takes NO pins, so
+        concurrent prefetches can never starve the demand path.  The PE
+        worker re-stages authoritatively before executing: a free flag
+        hit when the warmed bytes survived, a re-fetch if pressure
+        evicted them in between."""
         ctx, loc = self.context, pe.location
         bw = ctx.ledger.bandwidth_model
         ins: List[Any] = []
         model_s = 0.0
-        if self.policy == "reference":
-            # Host-owned: host is current (producer wrote host under this
-            # policy); copy host→PE unconditionally.
-            for hd in task.inputs:
-                with hd.lock:
-                    host_val = hd.copies[HOST]
-                    if loc != HOST:
-                        moved = ctx.spaces[loc].ingest(host_val)
-                        ctx.ledger.record(HOST, loc, hd.nbytes)
-                        model_s += bw.seconds(HOST, loc, hd.nbytes)
-                        ins.append(moved)
-                    else:
-                        ins.append(host_val)
-        else:  # rimms: flag check + direct src→PE copy only when needed
-            for hd in task.inputs:
-                value, tr_s = ctx.stage(hd, loc)
-                ins.append(value)
-                model_s += tr_s
-        return ins, model_s
+        ctx.take_spill_seconds()  # clear this thread's residue
+        if not prefetch:
+            self._pin_inputs(task, loc)
+        try:
+            if self.policy == "reference":
+                # Host-owned: host is current (producer wrote host under
+                # this policy); copy host→PE unconditionally.
+                for hd in task.inputs:
+                    with hd.lock:
+                        host_val = hd.copies[HOST]
+                        if loc != HOST:
+                            moved = ctx.spaces[loc].ingest(host_val)
+                            ctx.ledger.record(HOST, loc, hd.nbytes)
+                            model_s += bw.seconds(HOST, loc, hd.nbytes)
+                            ins.append(moved)
+                        else:
+                            ins.append(host_val)
+            else:  # rimms: flag check + direct src→PE copy when needed
+                guard = (ctx.prefetch_guard() if prefetch
+                         else contextlib.nullcontext())
+                with guard:
+                    for hd in task.inputs:
+                        value, tr_s = ctx.stage(hd, loc)
+                        ins.append(value)
+                        model_s += tr_s
+        except BaseException:
+            if not prefetch:
+                self._unpin_inputs(task, loc)
+            raise
+        return ins, model_s, ctx.take_spill_seconds()
 
     def _run_kernel(self, task: Task, pe: PE, ins: List[Any]) -> Tuple[tuple, float]:
         """Execute the kernel; returns (outputs, measured seconds).  Blocks
@@ -210,12 +273,14 @@ class Runtime:
         self.cost_model.observe(task.op, pe.kind, task.in_bytes, dt)
         return outs, dt
 
-    def _commit_outputs(self, task: Task, pe: PE, outs: tuple) -> float:
-        """Flag updates (+ host writeback under reference). Returns modeled
-        output-transfer seconds."""
+    def _commit_outputs(self, task: Task, pe: PE, outs: tuple) -> Tuple[float, float]:
+        """Flag updates (+ host writeback under reference). Returns
+        (modeled output-transfer seconds, modeled eviction-stall seconds
+        the output reservations caused)."""
         ctx, loc = self.context, pe.location
         bw = ctx.ledger.bandwidth_model
         model_s = 0.0
+        ctx.take_spill_seconds()  # clear this thread's residue
         if self.policy == "reference":
             for hd, val in zip(task.outputs, outs):
                 if loc != HOST:
@@ -228,7 +293,7 @@ class Runtime:
         else:
             for hd, val in zip(task.outputs, outs):
                 ctx.mark_written(hd, loc, val)
-        return model_s
+        return model_s, ctx.take_spill_seconds()
 
     # -- execution --------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> float:
@@ -242,21 +307,29 @@ class Runtime:
         for task in tasks:
             pe = self._schedule(task)
             w0 = time.perf_counter()
-            ins, tr_s = self._stage_inputs(task, pe)
-            outs, comp_s = self._run_kernel(task, pe, ins)
-            out_s = self._commit_outputs(task, pe, outs)
+            ins, tr_s, sp_s = self._stage_inputs(task, pe)
+            try:
+                outs, comp_s = self._run_kernel(task, pe, ins)
+                out_s, sp2_s = self._commit_outputs(task, pe, outs)
+            finally:
+                self._unpin_inputs(task, pe.location)
             w1 = time.perf_counter()
+            spill_s = sp_s + sp2_s
             # Model simulation uses the static compute estimate so serial
             # and graph modeled makespans are directly comparable (see
-            # CostModel.prior_estimate).
+            # CostModel.prior_estimate).  Spill stalls (eviction
+            # write-backs under capacity pressure) extend the task's
+            # modeled interval exactly like transfers do.
             comp_m = self.cost_model.prior_estimate(task.op, pe.kind, task.in_bytes)
+            dur_m = tr_s + spill_s + comp_m + out_s
             self.timeline.add(TimelineEvent(
                 task=task.name or task.op, pe=pe.name,
                 wall_start=w0 - t0, wall_end=w1 - t0,
-                model_start=model_t, model_end=model_t + tr_s + comp_m + out_s,
+                model_start=model_t, model_end=model_t + dur_m,
                 transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
+                spill_s=spill_s,
             ))
-            model_t += tr_s + comp_m + out_s
+            model_t += dur_m
             self.task_log.append((task.name or task.op, pe.name))
         self.last_makespan_model = model_t
         return time.perf_counter() - t0

@@ -94,10 +94,15 @@ class AxisRules:
             n *= self.mesh.shape[a]
         return n
 
-    def entry(self, logical: Optional[str], dim: Optional[int]) -> Union[None, str, Tuple[str, ...]]:
+    def entry(self, logical: Optional[str], dim: Optional[int]) -> Union[None, Tuple[str, ...]]:
         """Resolve one PartitionSpec entry, with the divisibility guard:
         non-divisible dims are replicated, except ``UNEVEN_OK`` logicals
-        with dim ≥ axis size, which shard unevenly (XLA pads)."""
+        with dim ≥ axis size, which shard unevenly (XLA pads).
+
+        Always returns the canonical tuple form (or None): older jax
+        compares PartitionSpec entries structurally, so mixing ``"data"``
+        and ``("data",)`` breaks spec equality (see
+        repro.distributed.compat)."""
         axes = self.axes_for(logical)
         if not axes:
             return None
@@ -106,7 +111,7 @@ class AxisRules:
             if size > 1 and dim % size != 0:
                 self.dropped.append((logical, dim, axes))
                 return None
-        return axes if len(axes) > 1 else axes[0]
+        return axes
 
     def spec(self, *logical: Optional[str], dims: Optional[Sequence[Optional[int]]] = None) -> P:
         dims = dims if dims is not None else [None] * len(logical)
@@ -157,7 +162,9 @@ def shard_if_divisible(dim: int, logical: str) -> Union[None, str, Tuple[str, ..
 
 def resolve_spec(p: P, rules: AxisRules, dims: Optional[Sequence[int]] = None) -> P:
     """Translate a logical PartitionSpec (entries are logical axis names)
-    into a mesh PartitionSpec under ``rules``."""
+    into a mesh PartitionSpec under ``rules``.  Entries come out in the
+    same canonical tuple form as :meth:`AxisRules.entry`, so specs built
+    through either path compare equal on every jax version."""
     entries = []
     for i, e in enumerate(p):
         dim = dims[i] if dims is not None and i < len(dims) else None
@@ -168,10 +175,9 @@ def resolve_spec(p: P, rules: AxisRules, dims: Optional[Sequence[int]] = None) -
         axes: list = []
         for nm in names:
             a = rules.entry(nm, dim)
-            if a is None:
-                continue
-            axes.extend((a,) if isinstance(a, str) else a)
-        entries.append(None if not axes else (axes[0] if len(axes) == 1 else tuple(axes)))
+            if a is not None:
+                axes.extend(a)
+        entries.append(tuple(axes) if axes else None)
     return P(*entries)
 
 

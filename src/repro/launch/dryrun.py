@@ -151,7 +151,8 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         + rec["memory"]["output_size_in_bytes"]
         - rec["memory"]["alias_size_in_bytes"]
     )
-    ca = compiled.cost_analysis() or {}
+    from repro.distributed.compat import cost_analysis
+    ca = cost_analysis(compiled)
     rec["cost"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

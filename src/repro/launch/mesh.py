@@ -3,9 +3,7 @@ for the dry-run)."""
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
+from repro.distributed.compat import make_mesh
 from repro.distributed.sharding import (
     MULTI_POD_RULES,
     SINGLE_POD_RULES,
@@ -19,14 +17,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return make_mesh((data, model), ("data", "model"))
 
 
 def rules_for_mesh(mesh, overrides=None) -> AxisRules:

@@ -52,10 +52,11 @@ def test_retention(tmp_path):
 
 def test_elastic_restore_onto_mesh(tmp_path):
     """Checkpoints store global logical arrays → restore onto any mesh."""
+    from repro.distributed.compat import make_mesh
+
     t = tree()
     save_checkpoint(tmp_path, 2, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
     restored, step, _ = restore_checkpoint(tmp_path, t, shardings=sh)

@@ -1,9 +1,9 @@
 """Logical-axis rules, divisibility guards, spec resolution."""
 
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import make_mesh
 from repro.distributed.sharding import (
     MULTI_POD_RULES,
     SINGLE_POD_RULES,
@@ -15,8 +15,7 @@ from repro.distributed.sharding import (
 
 
 def mesh_1x1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_resolution_basic():
@@ -44,7 +43,10 @@ def test_resolve_spec_with_dims():
     mesh = mesh_1x1()
     rules = AxisRules(dict(SINGLE_POD_RULES), mesh=mesh)
     p = resolve_spec(P("batch", "vocab"), rules, (8, 100))
-    assert p == P("data", "model")
+    # canonical tuple entries — same form as AxisRules.spec, so the two
+    # spec-building paths compare equal on every jax version
+    assert p == P(("data",), ("model",))
+    assert p == rules.spec("batch", "vocab", dims=(8, 100))
 
 
 def test_unknown_logical_axis_raises():
