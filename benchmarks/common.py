@@ -48,5 +48,8 @@ def run_app(builder, *, policy: str, accelerators=("gpu0",), n_cpu: int = 1,
         "copies": snap["total_copies"] / repeats,
         "bytes": snap["total_bytes"] / repeats,
         "modeled_s": snap["modeled_seconds"] / repeats,
+        # per-(src,dst) transfer matrix (per *link* under a topology):
+        # copies/bytes/modeled_s per directed pair (ISSUE 3)
+        "per_link": snap["per_link"],
         "ledger": snap,
     }

@@ -10,11 +10,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: 2fft,2fzf,alloc,overhead,3zip,apps,"
-                         "marking,roofline,graph")
+                         "marking,roofline,graph,pressure,topology")
     args = ap.parse_args()
     from . import (bench_2fft, bench_2fzf, bench_3zip, bench_alloc,
                    bench_apps, bench_graph, bench_marking, bench_overhead,
-                   bench_roofline)
+                   bench_pressure, bench_roofline, bench_topology)
     benches = {
         "alloc": bench_alloc.run,
         "overhead": lambda: bench_overhead.run(n_calls=200_000),
@@ -25,6 +25,9 @@ def main() -> None:
         "marking": bench_marking.run,
         "roofline": bench_roofline.run,
         "graph": bench_graph.run,
+        "pressure": lambda: bench_pressure.run_pressure(
+            ways=8, n=1 << 14, json_path=None, smoke=False),
+        "topology": bench_topology.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -7,18 +7,26 @@ from .hete import (
     HeteContext, HeteData, PrefetchDeferred, default_context,
     hete_free, hete_malloc, hete_sync,
 )
-from .instrument import Timeline, TimelineEvent, TransferLedger, Timer, ledger
+from .instrument import (
+    Timeline, TimelineEvent, TransferEvent, TransferLedger, Timer, ledger,
+)
 from .locations import HOST, BandwidthModel, Location
 from .paged_kv import PagedKVPool, gather_kv, init_pool_arrays, write_token
 from .runtime import PE, Runtime, Task, make_emulated_soc
+from .topology import (
+    Link, Topology, TopologyBandwidthModel, TopologyError, build_preset,
+)
 
 __all__ = [
     "AllocError", "BitsetAllocator", "Extent", "NextFitAllocator", "make_allocator",
     "GraphExecutor", "WorkerPool", "CostModel", "TaskGraph", "TaskNode", "build_graph",
     "HeteContext", "HeteData", "PrefetchDeferred", "default_context",
     "hete_free", "hete_malloc", "hete_sync",
-    "Timeline", "TimelineEvent", "TransferLedger", "Timer", "ledger",
+    "Timeline", "TimelineEvent", "TransferEvent", "TransferLedger", "Timer",
+    "ledger",
     "HOST", "BandwidthModel", "Location",
+    "Link", "Topology", "TopologyBandwidthModel", "TopologyError",
+    "build_preset",
     "PagedKVPool", "gather_kv", "init_pool_arrays", "write_token",
     "PE", "Runtime", "Task", "make_emulated_soc",
 ]

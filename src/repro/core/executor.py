@@ -23,11 +23,21 @@ This is the runtime half of the ISSUE-1 subsystem (the DAG half lives in
   concurrent prefetches can never pin an arena full and starve a
   worker's reservation;
 * scheduling: ``round_robin`` (static, bit-identical to serial dispatch),
-  ``data_affinity`` (dynamic, flag-aware), or ``heft`` — a HEFT-lite
-  list scheduler that ranks ready tasks by upward rank and places each on
-  the PE minimizing estimated finish time under the
-  :class:`~repro.core.locations.BandwidthModel` and the online
-  :class:`~repro.core.graph.CostModel`.
+  ``data_affinity`` (dynamic, flag-aware), or ``heft`` — a HEFT
+  list scheduler that ranks ready tasks by upward rank and places each
+  with an **insertion-based slot search** (ISSUE 3): a task may slide
+  into an idle gap on a PE's modeled timeline left by earlier
+  placements, not just append after the last one.  Costs come from the
+  bandwidth model — routed and **contention-aware** when the context
+  uses a :class:`~repro.core.topology.TopologyBandwidthModel`: a
+  transfer that would queue on a busy shared link is priced with that
+  wait, so placement reacts to link sharing — and the online
+  :class:`~repro.core.graph.CostModel`;
+* **topology replay** (ISSUE 3): when a topology is active, the modeled
+  makespan and Gantt are produced by a deterministic post-run replay of
+  the executed schedule — per-link busy-until contention applied in
+  (ready-time, submission-index) order — so gated metrics stay exact
+  across runs even though worker wall-clock interleaving varies.
 
 Because every PE here is emulated on one physical CPU, the *measured*
 wall clock understates the win; the executor therefore also simulates
@@ -38,22 +48,45 @@ directly comparable to the serial :meth:`Runtime.run` modeled makespan.
 
 from __future__ import annotations
 
+import bisect
+import heapq
 import queue
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, List, Optional, Sequence, TYPE_CHECKING
+from typing import Any, Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 from .graph import TaskGraph, TaskNode, build_graph
 from .hete import PrefetchDeferred
-from .instrument import Timeline, TimelineEvent
+from .instrument import Timeline, TimelineEvent, TransferEvent
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycle
     from .runtime import PE, Runtime, Task
 
-__all__ = ["GraphExecutor", "WorkerPool"]
+__all__ = ["GraphExecutor", "WorkerPool", "insert_slot"]
 
 _SHUTDOWN = None
+
+
+def insert_slot(busy: List[Tuple[float, float]], earliest: float,
+                duration: float) -> float:
+    """HEFT insertion-based slot search: the earliest start ≥ ``earliest``
+    at which ``duration`` fits into the sorted busy-interval list — an
+    idle gap between existing placements, or after the last one.
+    ``busy`` intervals may abut but never overlap (they are produced by
+    :func:`commit_slot`)."""
+    t = earliest
+    for s, e in busy:
+        if t + duration <= s:
+            break  # fits entirely in the gap before this interval
+        t = max(t, e)
+    return t
+
+
+def commit_slot(busy: List[Tuple[float, float]], start: float,
+                duration: float) -> None:
+    """Reserve ``[start, start+duration)`` in the sorted interval list."""
+    bisect.insort(busy, (start, start + duration))
 
 
 class WorkerPool:
@@ -155,6 +188,10 @@ class GraphExecutor:
         if self.scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {self.scheduler!r}")
         self.prefetch = prefetch
+        # interconnect topology, when the context routes transfers
+        self._topo = getattr(
+            rt.context.ledger.bandwidth_model, "topology", None
+        )
 
     # -- public entry -------------------------------------------------------
     def run(self, tasks: Sequence["Task"]) -> Dict[str, Any]:
@@ -173,7 +210,17 @@ class GraphExecutor:
         self._completed = 0
         self._model_finish: Dict[int, float] = {}
         self._pe_model: Dict[str, float] = {pe.name: 0.0 for pe in rt.pes}
-        self._sched_avail: Dict[str, float] = {pe.name: 0.0 for pe in rt.pes}
+        # HEFT insertion-based slot search (ISSUE 3): per-PE sorted busy
+        # intervals on the scheduler's modeled timeline.
+        self._pe_slots: Dict[str, List[Tuple[float, float]]] = {
+            pe.name: [] for pe in rt.pes
+        }
+        if self._topo is not None:
+            self._topo.reset_contention()
+        # per-task execution records feeding the deterministic topology
+        # replay: (index, pe name, moves, comp_m, spill_s, out_s, tr_s,
+        # comp_s, w0, w1)
+        self._records: Dict[int, tuple] = {}
         # run lifecycle: late items (after teardown) are abandoned, and
         # teardown waits until in-flight items leave the workers
         self._finished = False
@@ -216,7 +263,12 @@ class GraphExecutor:
         wall = time.perf_counter() - self._t0
         if self._error is not None:
             raise self._error
-        rt.last_makespan_model = max(self._model_finish.values(), default=0.0)
+        if self._topo is not None:
+            self._replay_with_topology()
+        else:
+            rt.last_makespan_model = max(
+                self._model_finish.values(), default=0.0
+            )
         return self._report(graph, wall)
 
     # -- scheduling ---------------------------------------------------------
@@ -229,9 +281,23 @@ class GraphExecutor:
             return cm.mean_estimate(task.op, kinds, task.in_bytes)
 
         def comm_cost(task: "Task") -> float:
-            return bw.latency_s + task.in_bytes / bw.host_device_bw
+            return bw.typical(task.in_bytes)
 
         graph.compute_ranks(compute_cost, comm_cost)
+
+    def _staging_delay(self, task: "Task", pe: "PE", at: float) -> float:
+        """Extra modeled wait the task's input transfers would queue on
+        busy interconnect links if issued at ``at`` (0 without a
+        topology) — the contention term of HEFT placement."""
+        if self._topo is None:
+            return 0.0
+        delay = 0.0
+        for hd in task.inputs:
+            src = hd.last_location
+            if src != pe.location:
+                delay = max(delay, self._topo.queue_delay(
+                    src, pe.location, hd.nbytes, at=at))
+        return delay
 
     def _pick_pe(self, node: TaskNode) -> "PE":
         """Dynamic placement for a ready node (deps complete ⇒ input flags
@@ -244,18 +310,30 @@ class GraphExecutor:
             return rt._affinity_pick(task, pes)
         # heft: earliest-estimated-finish-time placement, on the same
         # cost basis as serial heft dispatch (Runtime._heft_costs) plus
-        # per-PE availability and input-readiness terms.
+        # input-readiness, link-contention, and an insertion-based slot
+        # search over each PE's modeled busy intervals (ISSUE 3).
         ready_m = max(
             (self._model_finish.get(d, 0.0) for d in node.deps), default=0.0
         )
 
-        def eft(pe: "PE") -> float:
+        def placement(pe: "PE") -> Tuple[float, float, float]:
             tr, est = rt._heft_costs(task, pe)
-            return max(self._sched_avail[pe.name], ready_m + tr) + est
+            earliest = ready_m + tr + self._staging_delay(task, pe, ready_m)
+            start = insert_slot(self._pe_slots[pe.name], earliest, est)
+            return start + est, start, est
 
-        efts = {pe.name: eft(pe) for pe in pes}
-        best = min(pes, key=lambda pe: (efts[pe.name], pe.name))
-        self._sched_avail[best.name] = efts[best.name]
+        efts = {pe.name: placement(pe) for pe in pes}
+        best = min(pes, key=lambda pe: (efts[pe.name][0], pe.name))
+        _, start, est = efts[best.name]
+        commit_slot(self._pe_slots[best.name], start, est)
+        if self._topo is not None:
+            # Commit this task's expected link traffic so later
+            # placements see the shared links as busy.
+            for hd in task.inputs:
+                src = hd.last_location
+                if src != best.location:
+                    self._topo.transfer(src, best.location, hd.nbytes,
+                                        at=ready_m, commit=True)
         return best
 
     def _schedule_ready(self, indices: List[int]) -> None:
@@ -336,8 +414,9 @@ class GraphExecutor:
                     staged = self.rt._stage_inputs(node.task, pe_assigned)
                     if pre is not None:  # account the wasted warm-up too
                         staged = (staged[0], staged[1] + pre[0][1],
-                                  staged[2] + pre[0][2])
-                ins, tr_s, sp_s = staged
+                                  staged[2] + pre[0][2],
+                                  pre[0][3] + staged[3])
+                ins, tr_s, sp_s, moves = staged
                 try:
                     outs, comp_s = self.rt._run_kernel(node.task, pe_assigned, ins)
                     out_s, sp2_s = self.rt._commit_outputs(
@@ -355,7 +434,7 @@ class GraphExecutor:
                 # dependents (unknown pin, op with no eligible PE) — it
                 # must stay inside the except so the run never hangs.
                 self._complete(node, pe_assigned, w0, w1, tr_s,
-                               sp_s + sp2_s, comp_s, out_s)
+                               sp_s + sp2_s, comp_s, out_s, moves)
             except BaseException as e:  # surface to the caller, stop the run
                 with self._lock:
                     if self._error is None:
@@ -389,6 +468,7 @@ class GraphExecutor:
         spill_s: float,
         comp_s: float,
         out_s: float,
+        moves: Sequence[tuple] = (),
     ) -> None:
         rt = self.rt
         with self._lock:
@@ -419,6 +499,10 @@ class GraphExecutor:
                 spill_s=spill_s,
             ))
             rt.task_log.append((node.name, pe.name))
+            self._records[node.index] = (
+                pe.name, tuple(moves), comp_m, spill_s, out_s, tr_s,
+                comp_s, w0 - self._t0, w1 - self._t0,
+            )
             self._completed += 1
             newly_ready: List[int] = []
             for s in node.dependents:
@@ -431,6 +515,67 @@ class GraphExecutor:
                 self._schedule_ready(newly_ready)
             if self._completed == len(self._graph):
                 self._done.set()
+
+    # -- topology replay (ISSUE 3) ------------------------------------------
+    def _replay_with_topology(self) -> None:
+        """Deterministically re-simulate the executed schedule under
+        per-link contention.
+
+        The online simulation in :meth:`_complete` runs in worker
+        completion order, which varies run to run — fine for scalar
+        accounting (it is order-independent) but not for link busy-until
+        state.  This replay processes the same placements, transfers and
+        compute estimates in (ready-time, submission-index) order:
+        a task's input copies are issued the moment its dependencies
+        finish, walk their routes through link contention (a shared
+        bridge serializes them), and compute starts when both the staged
+        bytes and the PE are free.  It rebuilds the timeline — including
+        per-link transfer lanes — and the modeled makespan, so
+        topology-gated metrics are exact across runs."""
+        rt, topo, graph = self.rt, self._topo, self._graph
+        topo.reset_contention()
+        timeline = Timeline()
+        pe_free: Dict[str, float] = {pe.name: 0.0 for pe in rt.pes}
+        finish: Dict[int, float] = {}
+        remaining = [len(n.deps) for n in graph.nodes]
+        heap: List[Tuple[float, int]] = [
+            (0.0, n.index) for n in graph.nodes if not n.deps
+        ]
+        heapq.heapify(heap)
+        while heap:
+            ready_m, i = heapq.heappop(heap)
+            node = graph.nodes[i]
+            (pe_name, moves, comp_m, spill_s, out_s, tr_s, comp_s,
+             w0, w1) = self._records[i]
+            stage_end = ready_m
+            for src, dst, nbytes in moves:
+                _, end, hops = topo.transfer(src, dst, nbytes, at=ready_m,
+                                             commit=True)
+                for link, hs, he in hops:
+                    timeline.add_transfer(TransferEvent(
+                        link=link.label, task=node.name, nbytes=nbytes,
+                        model_start=hs, model_end=he,
+                    ))
+                stage_end = max(stage_end, end)
+            start = max(pe_free[pe_name], stage_end + spill_s)
+            end = start + comp_m + out_s
+            pe_free[pe_name] = end
+            finish[i] = end
+            stage_s = (stage_end - ready_m) + spill_s
+            timeline.add(TimelineEvent(
+                task=node.name, pe=pe_name, wall_start=w0, wall_end=w1,
+                model_start=max(ready_m, start - stage_s), model_end=end,
+                transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
+                spill_s=spill_s,
+            ))
+            for s in node.dependents:
+                remaining[s] -= 1
+                if remaining[s] == 0:
+                    heapq.heappush(heap, (
+                        max(finish[d] for d in graph.nodes[s].deps), s
+                    ))
+        rt.timeline = timeline
+        rt.last_makespan_model = max(finish.values(), default=0.0)
 
     # -- reporting ----------------------------------------------------------
     def _report(self, graph: TaskGraph, wall: float) -> Dict[str, Any]:
@@ -448,6 +593,7 @@ class GraphExecutor:
             "scheduler": self.scheduler,
             "policy": rt.policy,
             "prefetch": self.prefetch,
+            "topology": self._topo.name if self._topo is not None else None,
             "per_pe_busy_model_s": per_pe,
             "timeline": rt.timeline,
             "spill_stall_model_s": rt.timeline.total_spill_s,

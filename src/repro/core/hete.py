@@ -39,6 +39,17 @@ exceeds capacity.  ``pin``/``unpin`` (and the ``pinned`` context
 manager) bound eviction; the graph executor additionally *protects*
 bytes that queued tasks still read so prefetch never spills them
 (prefetch under pressure defers instead — :class:`PrefetchDeferred`).
+
+Interconnect topology (ISSUE 3): when the ledger's bandwidth model is a
+:class:`~repro.core.topology.TopologyBandwidthModel`, every copy
+``stage`` performs is priced and recorded along its *route* — one ledger
+entry per hop (store-and-forward), so a device↔device transfer on a
+host-bridged platform shows up as two link crossings.  Eviction
+write-back likewise chooses the cheapest destination: host, or a **peer
+device arena** with free capacity when the interconnect makes the peer
+link strictly cheaper (spill-to-peer) — the flag moves to the peer, host
+bytes stay stale until synced, and fragment aliasing is preserved
+because fragments' host views are never rebound.
 """
 
 from __future__ import annotations
@@ -348,6 +359,40 @@ class HeteContext:
     def _spill_add(self, seconds: float) -> None:
         self._tls.spill_s = getattr(self._tls, "spill_s", 0.0) + seconds
 
+    # -- routed copy accounting (ISSUE 3) ------------------------------------
+    def record_copy(self, src: Location, dst: Location, nbytes: int) -> float:
+        """Ledger-record one logical copy along its route and return the
+        modeled seconds it costs.  Scalar bandwidth model: one direct
+        (src, dst) entry.  Topology model: one entry per hop of the
+        cheapest route (store-and-forward), each priced at that link's
+        service time — the per-link traffic matrix falls out of the
+        ledger's (src, dst) counters."""
+        bw = self.ledger.bandwidth_model
+        hops = bw.hops(src, dst)
+        if hops is None:
+            self.ledger.record(src, dst, nbytes)
+            return bw.seconds(src, dst, nbytes)
+        total = 0.0
+        for link in hops:
+            s = link.seconds(nbytes)
+            self.ledger.record(link.src, link.dst, nbytes, seconds=s)
+            total += s
+        return total
+
+    def _log_move(self, src: Location, dst: Location, nbytes: int) -> None:
+        """Append one performed copy to THIS thread's move log (drained
+        by :meth:`take_moves`) — the executor feeds these into the
+        contention-aware schedule replay."""
+        moves = getattr(self._tls, "moves", None)
+        if moves is not None:
+            moves.append((src, dst, nbytes))
+
+    def take_moves(self) -> List[Tuple[Location, Location, int]]:
+        """Drain (and re-arm) this thread's move log."""
+        out = getattr(self._tls, "moves", None) or []
+        self._tls.moves = []
+        return out
+
     def _touch(self, root: HeteData, loc: Location) -> None:
         # Approximate LRU clock: racy increments lose ticks, which only
         # coarsens victim order — never correctness.
@@ -488,12 +533,101 @@ class HeteContext:
             dirty = self._dirty_bytes(cand, loc)
             cost_s = bw.seconds(HOST, loc, cand.nbytes)
             if dirty:
-                cost_s += bw.seconds(loc, HOST, dirty)
+                # Write-back goes to the *cheapest* destination this
+                # victim could spill to (host, or a peer arena with
+                # room) — rank victims by the cost eviction really pays.
+                _, wb_s = self._writeback_target(cand, loc, dirty)
+                cost_s += wb_s
             key = (cand.last_touch.get(loc, 0), cost_s / max(cand.nbytes, 1),
                    rid)
             if best_key is None or key < best_key:
                 best, best_key = cand, key
         return best
+
+    def _writeback_target(
+        self, root: HeteData, loc: Location, dirty: int
+    ) -> Tuple[Location, float]:
+        """Cheapest destination for ``root``'s dirty bytes when evicted
+        from ``loc``: host, or a peer device arena that (a) the
+        interconnect reaches strictly cheaper than host and (b) can take
+        the root's full extent *without evicting anything itself* (no
+        cascades).  Peers are considered only when a topology is active
+        — under the scalar default model eviction stays host-bound, so
+        pre-topology baselines and semantics hold exactly.  Called under
+        the arena lock.  Returns ``(target, modeled write-back
+        seconds)``."""
+        bw = self.ledger.bandwidth_model
+        best, best_s = HOST, bw.seconds(loc, HOST, dirty)
+        if getattr(bw, "topology", None) is None:
+            return best, best_s
+        from .topology import TopologyError
+
+        for ploc, pspace in self.spaces.items():
+            if ploc == loc or ploc == HOST or pspace.arena is None:
+                continue
+            if (ploc not in root.extents
+                    and pspace.arena.largest_free() < root.nbytes):
+                continue
+            try:
+                s = bw.seconds(loc, ploc, dirty)
+            except TopologyError:  # unreachable in this topology
+                continue
+            if s < best_s:
+                best, best_s = ploc, s
+        return best, best_s
+
+    def _spill_to_peer(
+        self, root: HeteData, loc: Location, peer: Location
+    ) -> Optional[float]:
+        """Move ``root``'s dirty bytes from ``loc`` directly to ``peer``
+        (device→device spill, ISSUE 3): reserve the root's extent in the
+        peer arena (never evicting — pre-checked by
+        :meth:`_writeback_target`), copy each dirty owner's bytes across
+        the peer link, and move its flag to ``peer``.  Host bytes are
+        untouched (still stale) and fragments' zero-copy host views stay
+        aliased.  Called under the arena lock with every owner lock
+        held.  Returns modeled write-back seconds, or ``None`` when the
+        spill cannot proceed (caller falls back to host write-back)."""
+        space, pspace = self.spaces[loc], self.spaces[peer]
+        owners = [root] + list(root.fragments or ())
+        dirty_owners = [o for o in owners if o.last_location == loc]
+        if not dirty_owners or any(loc not in o.copies for o in dirty_owners):
+            return None
+        if peer not in root.extents:
+            try:
+                ext = pspace.arena.alloc(root.nbytes, tag=id(root))
+            except AllocError:
+                return None
+            root.extents[peer] = ext
+            pspace.residents[id(root)] = root
+        wb_s = 0.0
+        if root.last_location == loc:
+            # The parent's loc copy is current for every loc-flagged
+            # interval: ONE whole-parent transfer covers root and
+            # fragments alike; fragments get zero-copy slices of the
+            # peer buffer (the shape _propagate_to_fragments produces).
+            moved = pspace.ingest(space.egress(root.copies[loc]))
+            root.copies[peer] = moved
+            root.last_location = peer
+            root.valid_at.add(peer)
+            wb_s += self.record_copy(loc, peer, root.nbytes)
+            if root.fragments:
+                step = int(root.fragments[0].shape[0])
+                for i, frag in enumerate(root.fragments):
+                    if frag.last_location == loc:
+                        frag.copies[peer] = moved[i * step:(i + 1) * step]
+                        frag.last_location = peer
+                        frag.valid_at.add(peer)
+        else:
+            # Fragments own the flag and hold their own device arrays:
+            # spill each dirty fragment individually.
+            for o in dirty_owners:
+                o.copies[peer] = pspace.ingest(space.egress(o.copies[loc]))
+                o.last_location = peer
+                o.valid_at.add(peer)
+                wb_s += self.record_copy(loc, peer, o.nbytes)
+        self._touch(root, peer)
+        return wb_s
 
     @staticmethod
     def _dirty_bytes(root: HeteData, loc: Location) -> int:
@@ -504,14 +638,17 @@ class HeteContext:
         return root.nbytes if root.last_location == loc else 0
 
     def _evict_locked(self, root: HeteData, loc: Location) -> bool:
-        """Evict ``root`` from ``loc``: write dirty bytes back to host via
-        the normal coherence paths (fragment aliasing preserved), drop the
-        device materializations, free the extent.  Called under the arena
-        lock; probes the buffer locks (root + every fragment) without
-        blocking — a contended lock means the buffer is in active use by
-        another thread, so the caller skips this victim.  The probe is
-        what keeps eviction deadlock-free: no thread ever blocks on a
-        buffer lock while holding the arena lock."""
+        """Evict ``root`` from ``loc``: write dirty bytes back to the
+        cheapest destination — host through the normal coherence paths,
+        or directly into a peer device arena when the interconnect makes
+        that strictly cheaper and the peer has room (spill-to-peer,
+        ISSUE 3) — then drop the materializations and free the extent.
+        Fragment aliasing is preserved on both paths.  Called under the
+        arena lock; probes the buffer locks (root + every fragment)
+        without blocking — a contended lock means the buffer is in
+        active use by another thread, so the caller skips this victim.
+        The probe is what keeps eviction deadlock-free: no thread ever
+        blocks on a buffer lock while holding the arena lock."""
         held = []
         for owner in [root] + list(root.fragments or ()):
             if not owner.lock.acquire(blocking=False):
@@ -526,38 +663,57 @@ class HeteContext:
                 space.residents.pop(id(root), None)
                 return False
             dirty = self._dirty_bytes(root, loc)
-            wb_s = 0.0
+            wb_s, target = 0.0, HOST
             if dirty:
-                # stage() makes the host bytes current — a direct loc→host
-                # copy, or a per-fragment gather when fragments own the
-                # flag — recording the copies in the ledger as usual.
-                self.stage(root, HOST)
-                wb_s = self.ledger.bandwidth_model.seconds(loc, HOST, dirty)
+                target, _ = self._writeback_target(root, loc, dirty)
+                # Write-back copies are spill cost, not staging traffic:
+                # keep them out of this thread's move log (they are
+                # accounted through spill_s / the ledger instead).
+                moves = getattr(self._tls, "moves", None)
+                mark = len(moves) if moves is not None else 0
+                if target != HOST:
+                    spilled = self._spill_to_peer(root, loc, target)
+                    if spilled is None:  # peer filled up meanwhile
+                        target = HOST
+                    else:
+                        wb_s = spilled
+                if target == HOST:
+                    # stage() makes the host bytes current — a direct
+                    # loc→host copy, or a per-fragment gather when
+                    # fragments own the flag — recording the copies in
+                    # the ledger as usual.
+                    self.stage(root, HOST)
+                    wb_s = self.ledger.bandwidth_model.seconds(loc, HOST, dirty)
+                if moves is not None:
+                    del moves[mark:]
                 self._spill_add(wb_s)
             # Move flags off the doomed materialization (eviction is the
-            # one sanctioned flag move outside mark_written — host
-            # becomes the owning resource).  HOST joins valid_at only
-            # when the write-back actually made it current: a clean
-            # replica evicted while a *third* location owns the flag
-            # must not resurrect a stale host copy (cached tracking).
+            # one sanctioned flag move outside mark_written — the
+            # write-back target becomes the owning resource; peer-spilled
+            # owners were re-flagged inside _spill_to_peer).  HOST joins
+            # valid_at only when a host write-back actually made it
+            # current: a clean replica evicted while a *third* location
+            # owns the flag must not resurrect a stale host copy
+            # (cached tracking).
             if root.last_location == loc:
                 root.last_location = HOST
             root.valid_at.discard(loc)
-            if dirty:
+            if dirty and target == HOST:
                 root.valid_at.add(HOST)
             root.copies.pop(loc, None)
             for frag in root.fragments or ():
                 if frag.last_location == loc:
                     frag.last_location = HOST
                 frag.valid_at.discard(loc)
-                if dirty:
+                if dirty and target == HOST:
                     frag.valid_at.add(HOST)
                 frag.copies.pop(loc, None)
             space.arena.free(ext)
             del root.extents[loc]
             space.residents.pop(id(root), None)
             root.eviction_epoch += 1
-            self.ledger.record_eviction(loc, root.nbytes, dirty, wb_s)
+            self.ledger.record_eviction(loc, root.nbytes, dirty, wb_s,
+                                        target=target)
             return True
         finally:
             for h in held:
@@ -629,8 +785,9 @@ class HeteContext:
             hd.valid_at.add(dst)
             if dst != HOST:
                 self._touch(hd.root, dst)
-            self.ledger.record(src, dst, hd.nbytes)
-            return moved, self.ledger.bandwidth_model.seconds(src, dst, hd.nbytes)
+            tr_s = self.record_copy(src, dst, hd.nbytes)
+            self._log_move(src, dst, hd.nbytes)
+            return moved, tr_s
 
     def mark_written(self, hd: HeteData, loc: Location, value: Any) -> None:
         """A task on ``loc`` produced ``value`` into ``hd`` (output flag

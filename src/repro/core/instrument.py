@@ -22,7 +22,8 @@ from typing import Iterator, List, Optional
 
 from .locations import DEFAULT_BANDWIDTH_MODEL, BandwidthModel, Location
 
-__all__ = ["TransferLedger", "ledger", "Timer", "Timeline", "TimelineEvent"]
+__all__ = ["TransferLedger", "ledger", "Timer", "Timeline", "TimelineEvent",
+           "TransferEvent"]
 
 
 @dataclasses.dataclass
@@ -42,33 +43,51 @@ class TransferLedger:
     )
     copies: Counter = dataclasses.field(default_factory=Counter)
     bytes_moved: Counter = dataclasses.field(default_factory=Counter)
+    # per-(src,dst) modeled seconds — with a topology model the keys are
+    # the individual *links* each routed transfer traversed (ISSUE 3)
+    modeled_by_pair: Counter = dataclasses.field(default_factory=Counter)
     modeled_seconds: float = 0.0
     flag_checks: int = 0  # last-resource-flag checks (§5.2.2 microbench)
     # -- capacity-pressure counters (ISSUE 2) --
     evictions: Counter = dataclasses.field(default_factory=Counter)  # per loc
     evicted_bytes: int = 0
-    writeback_bytes: int = 0  # dirty bytes written back to host on eviction
+    writeback_bytes: int = 0  # dirty bytes written back on eviction
     spill_stall_s: float = 0.0  # modeled seconds staging spent on write-backs
     n_spill_stalls: int = 0  # alloc attempts that had to evict first
     prefetch_deferrals: int = 0  # prefetches skipped to protect queued readers
+    # -- spill-to-peer counters (ISSUE 3) --
+    spills_to_peer: int = 0  # evictions whose write-back went to a peer arena
+    peer_writeback_bytes: int = 0  # dirty bytes spilled device→device
     _lock: threading.RLock = dataclasses.field(
         default_factory=threading.RLock, repr=False, compare=False
     )
 
-    def record(self, src: Location, dst: Location, nbytes: int) -> None:
+    def record(self, src: Location, dst: Location, nbytes: int,
+               seconds: Optional[float] = None) -> None:
+        """Record one copy (or one hop of a routed copy).  ``seconds``
+        overrides the bandwidth model's estimate — routed staging passes
+        the per-link service time so multi-hop accounting stays exact."""
         key = (str(src), str(dst))
+        if seconds is None:
+            seconds = self.bandwidth_model.seconds(src, dst, nbytes)
         with self._lock:
             self.copies[key] += 1
             self.bytes_moved[key] += nbytes
-            self.modeled_seconds += self.bandwidth_model.seconds(src, dst, nbytes)
+            self.modeled_by_pair[key] += seconds
+            self.modeled_seconds += seconds
 
     def record_eviction(self, loc: Location, nbytes: int,
-                        writeback_bytes: int, stall_s: float) -> None:
+                        writeback_bytes: int, stall_s: float,
+                        target: Optional[Location] = None) -> None:
         with self._lock:
             self.evictions[str(loc)] += 1
             self.evicted_bytes += nbytes
             self.writeback_bytes += writeback_bytes
             self.spill_stall_s += stall_s
+            if (target is not None and target.kind != "host"
+                    and writeback_bytes > 0):
+                self.spills_to_peer += 1
+                self.peer_writeback_bytes += writeback_bytes
 
     def record_spill_stall(self, n: int = 1) -> None:
         with self._lock:
@@ -97,10 +116,25 @@ class TransferLedger:
     def total_evictions(self) -> int:
         return sum(self.evictions.values())
 
+    def per_link_summary(self) -> dict:
+        """The per-(src,dst) traffic matrix: one row per directed pair
+        (with a topology model, per *link* — multi-hop transfers appear
+        once per hop they traversed)."""
+        with self._lock:
+            return {
+                f"{s}->{d}": {
+                    "copies": c,
+                    "bytes": self.bytes_moved[(s, d)],
+                    "modeled_s": self.modeled_by_pair[(s, d)],
+                }
+                for (s, d), c in sorted(self.copies.items())
+            }
+
     def reset(self) -> None:
         with self._lock:
             self.copies.clear()
             self.bytes_moved.clear()
+            self.modeled_by_pair.clear()
             self.modeled_seconds = 0.0
             self.flag_checks = 0
             self.evictions.clear()
@@ -109,6 +143,8 @@ class TransferLedger:
             self.spill_stall_s = 0.0
             self.n_spill_stalls = 0
             self.prefetch_deferrals = 0
+            self.spills_to_peer = 0
+            self.peer_writeback_bytes = 0
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -120,6 +156,7 @@ class TransferLedger:
                 "by_pair": {
                     f"{s}->{d}": c for (s, d), c in sorted(self.copies.items())
                 },
+                "per_link": self.per_link_summary(),
                 "evictions": dict(sorted(self.evictions.items())),
                 "total_evictions": self.total_evictions,
                 "evicted_bytes": self.evicted_bytes,
@@ -127,6 +164,8 @@ class TransferLedger:
                 "spill_stall_s": self.spill_stall_s,
                 "n_spill_stalls": self.n_spill_stalls,
                 "prefetch_deferrals": self.prefetch_deferrals,
+                "spills_to_peer": self.spills_to_peer,
+                "peer_writeback_bytes": self.peer_writeback_bytes,
             }
 
 
@@ -184,20 +223,45 @@ class TimelineEvent:
     spill_s: float = 0.0  # modeled eviction write-back stall during staging
 
 
+@dataclasses.dataclass(frozen=True)
+class TransferEvent:
+    """One hop of a routed transfer occupying one interconnect link in
+    modeled time — the Gantt's transfer lanes (ISSUE 3)."""
+
+    link: str  # link label, e.g. "host:cpu->device:gpu0"
+    task: str  # consumer task the bytes were staged for
+    nbytes: int
+    model_start: float
+    model_end: float
+
+
 class Timeline:
-    """Thread-safe ordered record of :class:`TimelineEvent`."""
+    """Thread-safe ordered record of :class:`TimelineEvent` (per-PE
+    compute lanes) and :class:`TransferEvent` (per-link transfer
+    lanes)."""
 
     def __init__(self) -> None:
         self._events: List[TimelineEvent] = []
+        self._transfers: List[TransferEvent] = []
         self._lock = threading.Lock()
 
     def add(self, ev: TimelineEvent) -> None:
         with self._lock:
             self._events.append(ev)
 
+    def add_transfer(self, ev: TransferEvent) -> None:
+        with self._lock:
+            self._transfers.append(ev)
+
     def events(self) -> List[TimelineEvent]:
         with self._lock:
             return sorted(self._events, key=lambda e: (e.model_start, e.pe))
+
+    def transfers(self) -> List[TransferEvent]:
+        with self._lock:
+            return sorted(
+                self._transfers, key=lambda e: (e.model_start, e.link)
+            )
 
     def __len__(self) -> int:
         with self._lock:
@@ -215,22 +279,44 @@ class Timeline:
             return sum(e.spill_s for e in self._events)
 
     def gantt(self, width: int = 72) -> str:
-        """Render a text Gantt chart over modeled time, one row per PE."""
+        """Render a text Gantt chart over modeled time: one row per PE
+        (``#`` compute) and, when routed transfers were recorded, one
+        lane per interconnect link (``=`` link busy)."""
         width = max(width, 12)  # room for the axis label row
         evs = self.events()
         if not evs:
             return "(empty timeline)"
-        span = max(e.model_end for e in evs) or 1.0
+        xfers = self.transfers()
+        span = (
+            max(
+                [e.model_end for e in evs]
+                + [x.model_end for x in xfers]
+            )
+            or 1.0
+        )
+        labels = sorted({e.pe for e in evs}) + sorted({x.link for x in xfers})
+        lw = max([10] + [len(l) for l in labels])
+
+        def paint(line, start, end, mark):
+            a = int(start / span * (width - 1))
+            b = max(a + 1, int(end / span * (width - 1)))
+            for i in range(a, min(b, width)):
+                line[i] = mark if line[i] == " " else "+"
+
         rows = []
         for pe in sorted({e.pe for e in evs}):
             line = [" "] * width
             for e in evs:
-                if e.pe != pe:
-                    continue
-                a = int(e.model_start / span * (width - 1))
-                b = max(a + 1, int(e.model_end / span * (width - 1)))
-                for i in range(a, min(b, width)):
-                    line[i] = "#" if line[i] == " " else "+"
-            rows.append(f"{pe:>10s} |{''.join(line)}|")
-        rows.append(f"{'':>10s}  0{'':{width - 10}s}{span * 1e3:.2f} ms (modeled)")
+                if e.pe == pe:
+                    paint(line, e.model_start, e.model_end, "#")
+            rows.append(f"{pe:>{lw}s} |{''.join(line)}|")
+        for link in sorted({x.link for x in xfers}):
+            line = [" "] * width
+            for x in xfers:
+                if x.link == link:
+                    paint(line, x.model_start, x.model_end, "=")
+            rows.append(f"{link:>{lw}s} |{''.join(line)}|")
+        rows.append(
+            f"{'':>{lw}s}  0{'':{width - 10}s}{span * 1e3:.2f} ms (modeled)"
+        )
         return "\n".join(rows)

@@ -67,5 +67,18 @@ class BandwidthModel:
             bw = self.device_device_bw
         return self.latency_s + nbytes / bw
 
+    def hops(self, src: Location, dst: Location) -> None:
+        """Routed hop list for a src→dst copy.  The scalar model has no
+        topology: ``None`` means "record one direct hop".  The
+        interconnect-aware counterpart
+        (:class:`repro.core.topology.TopologyBandwidthModel`) returns
+        the actual route."""
+        return None
+
+    def typical(self, nbytes: int) -> float:
+        """Placement-agnostic single-transfer estimate (HEFT's
+        communication term): the host↔device link."""
+        return self.latency_s + nbytes / self.host_device_bw
+
 
 DEFAULT_BANDWIDTH_MODEL = BandwidthModel()

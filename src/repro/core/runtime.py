@@ -205,10 +205,12 @@ class Runtime:
 
     def _stage_inputs(
         self, task: Task, pe: PE, *, prefetch: bool = False
-    ) -> Tuple[List[Any], float, float]:
+    ) -> Tuple[List[Any], float, float, List[tuple]]:
         """Materialize ``task``'s inputs at ``pe`` under the memory policy.
         Returns (input values, modeled transfer seconds, modeled seconds
-        stalled on eviction write-backs).
+        stalled on eviction write-backs, list of performed copies as
+        ``(src, dst, nbytes)`` — the executor's topology replay re-prices
+        these under per-link contention).
 
         Demand mode (default): inputs stay hard-pinned at ``pe`` until
         :meth:`_unpin_inputs` — callers release after commit.  Only one
@@ -223,10 +225,11 @@ class Runtime:
         hit when the warmed bytes survived, a re-fetch if pressure
         evicted them in between."""
         ctx, loc = self.context, pe.location
-        bw = ctx.ledger.bandwidth_model
         ins: List[Any] = []
         model_s = 0.0
         ctx.take_spill_seconds()  # clear this thread's residue
+        ctx.take_moves()  # arm + clear this thread's move log
+        moves: List[tuple] = []
         if not prefetch:
             self._pin_inputs(task, loc)
         try:
@@ -238,8 +241,8 @@ class Runtime:
                         host_val = hd.copies[HOST]
                         if loc != HOST:
                             moved = ctx.spaces[loc].ingest(host_val)
-                            ctx.ledger.record(HOST, loc, hd.nbytes)
-                            model_s += bw.seconds(HOST, loc, hd.nbytes)
+                            model_s += ctx.record_copy(HOST, loc, hd.nbytes)
+                            moves.append((HOST, loc, hd.nbytes))
                             ins.append(moved)
                         else:
                             ins.append(host_val)
@@ -251,11 +254,12 @@ class Runtime:
                         value, tr_s = ctx.stage(hd, loc)
                         ins.append(value)
                         model_s += tr_s
+                moves = ctx.take_moves()
         except BaseException:
             if not prefetch:
                 self._unpin_inputs(task, loc)
             raise
-        return ins, model_s, ctx.take_spill_seconds()
+        return ins, model_s, ctx.take_spill_seconds(), moves
 
     def _run_kernel(self, task: Task, pe: PE, ins: List[Any]) -> Tuple[tuple, float]:
         """Execute the kernel; returns (outputs, measured seconds).  Blocks
@@ -278,15 +282,13 @@ class Runtime:
         (modeled output-transfer seconds, modeled eviction-stall seconds
         the output reservations caused)."""
         ctx, loc = self.context, pe.location
-        bw = ctx.ledger.bandwidth_model
         model_s = 0.0
         ctx.take_spill_seconds()  # clear this thread's residue
         if self.policy == "reference":
             for hd, val in zip(task.outputs, outs):
                 if loc != HOST:
                     host_val = ctx.spaces[loc].egress(val)
-                    ctx.ledger.record(loc, HOST, hd.nbytes)
-                    model_s += bw.seconds(loc, HOST, hd.nbytes)
+                    model_s += ctx.record_copy(loc, HOST, hd.nbytes)
                 else:
                     host_val = np.asarray(val)
                 ctx.mark_written(hd, HOST, host_val.reshape(hd.shape))
@@ -295,6 +297,23 @@ class Runtime:
                 ctx.mark_written(hd, loc, val)
         return model_s, ctx.take_spill_seconds()
 
+    def _add_transfer_lanes(self, topo, task: Task, moves: Sequence[tuple],
+                            start: float) -> None:
+        """Record per-link :class:`TransferEvent` lanes for ``moves``
+        issued sequentially from modeled time ``start`` (serial mode —
+        contention state advances so lanes never overlap on one link)."""
+        from .instrument import TransferEvent
+
+        t = start
+        for src, dst, nbytes in moves:
+            _, end, hops = topo.transfer(src, dst, nbytes, at=t, commit=True)
+            for link, hs, he in hops:
+                self.timeline.add_transfer(TransferEvent(
+                    link=link.label, task=task.name or task.op,
+                    nbytes=nbytes, model_start=hs, model_end=he,
+                ))
+            t = end
+
     # -- execution --------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> float:
         """Execute tasks serially in submission order (data deps are
@@ -302,12 +321,15 @@ class Runtime:
         serialization).  Returns wall seconds; fills :attr:`timeline` and
         :attr:`last_makespan_model` for comparison against graph mode."""
         self.timeline = Timeline()
+        topo = getattr(self.context.ledger.bandwidth_model, "topology", None)
+        if topo is not None:
+            topo.reset_contention()
         model_t = 0.0
         t0 = time.perf_counter()
         for task in tasks:
             pe = self._schedule(task)
             w0 = time.perf_counter()
-            ins, tr_s, sp_s = self._stage_inputs(task, pe)
+            ins, tr_s, sp_s, moves = self._stage_inputs(task, pe)
             try:
                 outs, comp_s = self._run_kernel(task, pe, ins)
                 out_s, sp2_s = self._commit_outputs(task, pe, outs)
@@ -315,6 +337,10 @@ class Runtime:
                 self._unpin_inputs(task, pe.location)
             w1 = time.perf_counter()
             spill_s = sp_s + sp2_s
+            if topo is not None:
+                # Routed transfer lanes over modeled time: serial staging
+                # walks each copy's hops back-to-back from model_t.
+                self._add_transfer_lanes(topo, task, moves, model_t)
             # Model simulation uses the static compute estimate so serial
             # and graph modeled makespans are directly comparable (see
             # CostModel.prior_estimate).  Spill stalls (eviction
@@ -374,20 +400,32 @@ def make_emulated_soc(
     n_cpu: int = 1,
     accelerators: Sequence[str] = ("fft_acc0", "zip_acc0"),
     acc_ops: Optional[Dict[str, Sequence[str]]] = None,
-    arena_bytes: int = 64 << 20,  # 64 MiB UDMA buffer, as on the ZCU102
+    arena_bytes=64 << 20,  # 64 MiB UDMA buffer, as on the ZCU102
     allocator: str = "nextfit",
     block_size: int = 4096,
     context: Optional[HeteContext] = None,
     tracking: str = "flag",
+    topology=None,
 ) -> tuple:
     """Build (runtime-ready PEs, HeteContext) for an emulated SoC.
 
     ``acc_ops`` maps accelerator name → ops it supports; defaults derive
     from the name prefix ("fft_acc*" → fft/ifft, "zip_acc*" → zip,
     "gpu*" → everything).
+
+    ``arena_bytes`` is one capacity for every accelerator, or a dict
+    ``{accelerator name: bytes}`` for asymmetric arenas (spill-to-peer
+    scenarios need a roomy neighbour).
+
+    ``topology`` opts into routed, contention-aware transfer modeling
+    (ISSUE 3): a preset name from :data:`repro.core.topology.PRESETS`
+    ("emulated_soc", "pcie_tree", "nvlink_mesh", "host_bridged_fpga"), a
+    :class:`~repro.core.topology.Topology`, or a ready
+    :class:`~repro.core.topology.TopologyBandwidthModel`.  It replaces
+    the context ledger's scalar bandwidth model; ``None`` (the default)
+    keeps the scalar model, so existing baselines hold.
     """
     import jax
-    import jax.numpy as jnp
 
     ctx = context or HeteContext(tracking=tracking)
     device = jax.devices()[0]
@@ -406,14 +444,20 @@ def make_emulated_soc(
 
     default_ops = {"fft_acc": ("fft", "ifft"), "zip_acc": ("zip",),
                    "gpu": ("fft", "ifft", "zip", "generic")}
+    dev_locs: List[Location] = []
     for name in accelerators:
         kind = next((k for k in default_ops if name.startswith(k)), "acc")
         ops = tuple((acc_ops or {}).get(name, default_ops.get(kind, ())))
         loc = Location("device", name)
+        dev_locs.append(loc)
+        capacity = (
+            arena_bytes.get(name, 64 << 20)
+            if isinstance(arena_bytes, dict) else arena_bytes
+        )
         ctx.register_space(
             MemorySpace(
                 loc,
-                capacity=arena_bytes,
+                capacity=capacity,
                 allocator=allocator,
                 block_size=block_size,
                 ingest=_ingest,
@@ -421,4 +465,13 @@ def make_emulated_soc(
             )
         )
         pes.append(PE(name, "gpu" if kind == "gpu" else "acc", loc, frozenset(ops)))
+
+    if topology is not None:
+        from .topology import Topology, TopologyBandwidthModel, build_preset
+
+        if isinstance(topology, str):
+            topology = build_preset(topology, dev_locs)
+        if isinstance(topology, Topology):
+            topology = TopologyBandwidthModel(topology)
+        ctx.ledger.bandwidth_model = topology
     return pes, ctx
