@@ -10,11 +10,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: 2fft,2fzf,alloc,overhead,3zip,apps,"
-                         "marking,roofline,graph,pressure,topology")
+                         "marking,roofline,graph,pressure,topology,stream")
     args = ap.parse_args()
     from . import (bench_2fft, bench_2fzf, bench_3zip, bench_alloc,
                    bench_apps, bench_graph, bench_marking, bench_overhead,
-                   bench_pressure, bench_roofline, bench_topology)
+                   bench_pressure, bench_roofline, bench_stream,
+                   bench_topology)
     benches = {
         "alloc": bench_alloc.run,
         "overhead": lambda: bench_overhead.run(n_calls=200_000),
@@ -28,6 +29,7 @@ def main() -> None:
         "pressure": lambda: bench_pressure.run_pressure(
             ways=8, n=1 << 14, json_path=None, smoke=False),
         "topology": bench_topology.run,
+        "stream": bench_stream.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -1,52 +1,77 @@
-"""Quickstart: the RIMMS API on an emulated heterogeneous SoC.
+"""Quickstart: the RIMMS streaming session API on an emulated SoC.
 
-Mirrors the paper's Listing 4: hete_Malloc + fragment + task execution
-with runtime-managed data movement — and shows the ledger evidence of
-eliminated copies vs the host-owned reference flow (Fig 1).
+The session is the primary entry point (ISSUE 4): ``@rimms.op`` kernels
+register per-PE-kind variants, ``Session.malloc``/``Session.submit``
+return BufferFutures that extend a live task DAG, and the runtime owns
+placement, movement and completion — ``result()`` is the only sync
+point.  The ledger shows the eliminated copies vs the host-owned
+reference flow (paper Fig 1).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.apps.radar import build_2fzf, make_runtime
-from repro.core.hete import hete_sync
+from repro.apps.radar import make_session, submit_2fzf
+from repro.core import api as rimms
+
+
+# A custom op: one decorator per PE-kind variant — no register_kernel,
+# no Task lists.  (The radar import above already registered fft/ifft/zip
+# variants the same way.)
+@rimms.op("scale", kinds=("cpu", "gpu"))
+def scale(ins, *, k=2.0):
+    return (ins[0] * k).astype(np.complex64)
 
 
 def run_policy(policy: str):
-    rt, ctx = make_runtime(policy=policy, accelerators=("fft_acc0", "zip_acc0"))
-    bufs, tasks = build_2fzf(ctx, n=256, seed=42)
-    rt.run(tasks)  # warmup/compile
-    ctx.ledger.reset()
-    wall = rt.run(tasks)
-    out = hete_sync(bufs["out"], context=ctx)
-    return out, ctx.ledger.snapshot(), wall, rt.task_log[-4:]
+    """One 2FZF radar chain streamed through a session under ``policy``
+    on the paper's ACC-ACC scenario (FFT engine + ZIP engine, no CPU
+    PE); returns (output, ledger snapshot, placements)."""
+    with make_session(policy=policy, scheduler="round_robin", n_cpu=0,
+                      accelerators=("fft_acc0", "zip_acc0")) as s:
+        bufs = submit_2fzf(s, 256, seed=42)
+        out = bufs["out"].result()  # the only sync point
+        snapshot = s.ledger.snapshot()
+        placements = list(s.runtime.task_log)
+    s.runtime.close()
+    return out, snapshot, placements
 
 
 def main():
-    # --- Listing-4 flavoured API tour -----------------------------------
-    from repro.core.hete import HeteContext
+    # --- the session API tour --------------------------------------------
+    with make_session(accelerators=("gpu0",)) as s:
+        M, N = 8, 128
+        inp = s.malloc((M * N,), np.complex64)     # hete_Malloc
+        inp.hete.fragment(N)                       # fragment into M inputs
+        inp.hete[3].data[:] = 1.0 + 0j             # indexed fragment access
+        print(f"allocated {M}x{N} complex buffer, fragment 3 sum =",
+              inp.hete[3].data.sum())
 
-    ctx = HeteContext()
-    M, N = 8, 128
-    inp = ctx.malloc((M * N,), np.complex64)   # hete_Malloc
-    inp.fragment(N)                            # fragment into M FFT inputs
-    inp[3].data[:] = 1.0 + 0j                  # indexed fragment access
-    print(f"allocated {M}x{N} complex buffer, fragment 3 sum =",
-          inp[3].data.sum())
-    ctx.free(inp)                              # hete_Free
+        sig = s.malloc((N,), np.complex64)
+        sig.data[:] = np.exp(2j * np.pi * np.arange(N) * 4 / N)
+        f = s.submit("fft", [sig])                 # deferred: returns a future
+        g = s.submit("scale", [f], k=0.5)          # chains without waiting
+        back = s.submit("ifft", [g])
+        np.testing.assert_allclose(back.result(), 0.5 * sig.data, atol=1e-4)
+        print("fft -> scale(custom op) -> ifft chain ✓ "
+              f"({len(s.runtime.task_log)} tasks streamed)")
+
+        inp.free()                                 # free-after-last-use
+        sig.free()
+    s.runtime.close()
 
     # --- reference vs RIMMS on the 2FZF radar chain ----------------------
     results = {}
     for policy in ("reference", "rimms"):
-        out, ledger, wall, placement = run_policy(policy)
+        out, ledger, placements = run_policy(policy)
         results[policy] = out
         print(f"\n[{policy:9s}] copies={ledger['total_copies']} "
               f"bytes={ledger['total_bytes']} "
-              f"modeled={ledger['modeled_seconds']*1e6:.1f}us "
-              f"wall={wall*1e6:.1f}us")
+              f"modeled={ledger['modeled_seconds']*1e6:.1f}us")
         for pair, n in ledger["by_pair"].items():
             print(f"    {pair}: {n}")
+        print(f"    placements: {placements}")
     np.testing.assert_allclose(results["reference"], results["rimms"],
                                atol=1e-4)
     print("\nreference == rimms output ✓ (fewer copies, same math)")

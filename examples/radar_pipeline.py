@@ -1,25 +1,42 @@
-"""Radar applications end-to-end (paper Table 2, shrunk): RC, PD and SAR
-through the task runtime on GPU-only and 3CPU+1GPU configurations,
-reference vs RIMMS — plus the async task-graph executor (serial vs graph
-modeled makespan, transfer/compute overlap).
+"""Radar applications end-to-end (paper Table 2, shrunk) on the
+streaming session API: RC, PD and SAR chains submitted through a
+Session on GPU-only and 3CPU+1GPU configurations, reference vs RIMMS —
+plus multi-client streaming: concurrent submitter threads sharing one
+session, windowed-HEFT placement, and the modeled Gantt.
 
 Run:  PYTHONPATH=src python examples/radar_pipeline.py
 """
 
 import functools
+import threading
 
-from repro.apps.radar import build_pd, build_rc, build_sar, make_runtime, run_pipeline
+from repro.apps.radar import (build_pd, build_rc, build_sar, make_session,
+                              submit_2fzf)
 
 
-def bench(builder, policy, n_cpu, accelerators, *, mode="serial",
-          scheduler="round_robin"):
-    rt, ctx = make_runtime(policy=policy, n_cpu=n_cpu,
-                           accelerators=accelerators, scheduler=scheduler)
-    bufs, tasks = builder(ctx)
-    run_pipeline(rt, tasks, mode=mode)  # warmup
-    ctx.ledger.reset()
-    wall = run_pipeline(rt, tasks, mode=mode)
-    return wall, ctx.ledger.snapshot(), rt
+def bench(builder, policy, n_cpu, accelerators):
+    """Run one app's task build through a session (tasks stream in
+    submission order; round_robin keeps the paper's placement)."""
+    session = make_session(policy=policy, scheduler="round_robin",
+                           n_cpu=n_cpu, accelerators=accelerators)
+    # App builders produce (buffers, Task lists) against the context;
+    # stream the tasks through the session via wrapped buffers.
+    bufs, tasks = builder(session.context)
+    for t in tasks:
+        session.submit(t.op, t.inputs, out=t.outputs, pin=t.pin,
+                       name=t.name, **t.params)
+    session.barrier()  # jit warmup round
+    session.ledger.reset()
+    t0 = session.report()["wall_s"]
+    for t in tasks:
+        session.submit(t.op, t.inputs, out=t.outputs, pin=t.pin,
+                       name=t.name, **t.params)
+    session.barrier()
+    wall = session.report()["wall_s"] - t0
+    snap = session.ledger.snapshot()
+    session.close()
+    session.runtime.close()
+    return wall, snap
 
 
 def main():
@@ -33,8 +50,8 @@ def main():
     for name, builder in apps:
         for cfg_name, n_cpu, accs in (("gpu-only", 0, ("gpu0",)),
                                       ("3cpu-1gpu", 3, ("gpu0",))):
-            ref_w, ref_l, _ = bench(builder, "reference", n_cpu, accs)
-            rim_w, rim_l, _ = bench(builder, "rimms", n_cpu, accs)
+            ref_w, ref_l = bench(builder, "reference", n_cpu, accs)
+            rim_w, rim_l = bench(builder, "rimms", n_cpu, accs)
             print(
                 f"{name:4s} {cfg_name:10s} {ref_w*1e3:9.2f} {rim_w*1e3:9.2f} "
                 f"{ref_w/max(rim_w,1e-12):5.2f}x "
@@ -42,17 +59,34 @@ def main():
                 f"{ref_l['modeled_seconds']/max(rim_l['modeled_seconds'],1e-12):12.2f}x"
             )
 
-    # --- async graph executor: PD on two accelerators --------------------
-    print("\nPD (32-way) on 2 accelerators — serial vs task-graph executor:")
-    builder = functools.partial(build_pd, ways=32, n=128)
-    _, _, rt_s = bench(builder, "rimms", 0, ("gpu0", "gpu1"), mode="serial")
-    _, _, rt_g = bench(builder, "rimms", 0, ("gpu0", "gpu1"), mode="graph",
-                       scheduler="heft")
-    sm, gm = rt_s.last_makespan_model, rt_g.last_makespan_model
-    print(f"  modeled makespan: serial {sm*1e3:.3f} ms -> graph {gm*1e3:.3f} ms "
-          f"({sm/max(gm,1e-12):.2f}x)")
-    print("  graph schedule (modeled Gantt):")
-    print(rt_g.timeline.gantt(64))
+    # --- multi-client streaming: 4 clients share one 2-accelerator
+    # session; windowed HEFT places the interleaved chains --------------
+    print("\n4 concurrent clients x 4 radar chains on one 2-accelerator "
+          "session (windowed HEFT):")
+    session = make_session(policy="rimms", scheduler="heft", n_cpu=0,
+                           accelerators=("gpu0", "gpu1"))
+
+    def client(c):
+        for k in range(4):
+            bufs = submit_2fzf(session, 2048, seed=c * 10 + k,
+                               tag=f"_c{c}k{k}")
+            bufs["out"].result()  # each client blocks only on its own work
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    session.barrier()
+    rep = session.report()
+    print(f"  {rep['n_tasks']} tasks streamed, modeled makespan "
+          f"{rep['makespan_model']*1e3:.3f} ms, per-PE busy: "
+          + ", ".join(f"{pe}={s*1e3:.3f}ms"
+                      for pe, s in sorted(rep['per_pe_busy_model_s'].items())))
+    print("  stream schedule (modeled Gantt):")
+    print(rep["timeline"].gantt(64))
+    session.close()
+    session.runtime.close()
 
 
 if __name__ == "__main__":

@@ -21,19 +21,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api as rimms
+from repro.core.api import Session
 from repro.core.hete import HeteContext, HeteData
 from repro.core.runtime import PE, Runtime, Task, make_emulated_soc
 
 __all__ = [
     "register_kernels", "build_2fft", "build_2fzf", "build_3zip",
-    "build_rc", "build_pd", "build_sar", "make_runtime", "run_pipeline",
+    "build_rc", "build_pd", "build_sar", "make_runtime", "make_session",
+    "run_pipeline", "submit_2fzf",
 ]
 
 C64 = np.complex64
 
 
 # ---------------------------------------------------------------------------
-# PE kernels
+# PE kernels — registered as per-kind op variants (ISSUE 4): importing
+# this module fills the default registry, so `Session.emulated()` (and
+# `register_kernels` for batch runtimes) get the radar op set.
 # ---------------------------------------------------------------------------
 
 
@@ -52,14 +57,40 @@ def _jzip(a, b):
     return a * b
 
 
+@rimms.op("fft", kinds=("cpu",))
+def _fft_cpu(ins):
+    return np.fft.fft(ins[0], axis=-1).astype(C64)
+
+
+@rimms.op("ifft", kinds=("cpu",))
+def _ifft_cpu(ins):
+    return np.fft.ifft(ins[0], axis=-1).astype(C64)
+
+
+@rimms.op("zip", kinds=("cpu",))
+def _zip_cpu(ins):
+    return (ins[0] * ins[1]).astype(C64)
+
+
+@rimms.op("fft", kinds=("acc", "gpu"))
+def _fft_device(ins):
+    return _jfft(ins[0])
+
+
+@rimms.op("ifft", kinds=("acc", "gpu"))
+def _ifft_device(ins):
+    return _jifft(ins[0])
+
+
+@rimms.op("zip", kinds=("acc", "gpu"))
+def _zip_device(ins):
+    return _jzip(ins[0], ins[1])
+
+
 def register_kernels(rt: Runtime) -> None:
-    rt.register_kernel("fft", "cpu", lambda ins: np.fft.fft(ins[0], axis=-1).astype(C64))
-    rt.register_kernel("ifft", "cpu", lambda ins: np.fft.ifft(ins[0], axis=-1).astype(C64))
-    rt.register_kernel("zip", "cpu", lambda ins: (ins[0] * ins[1]).astype(C64))
-    for kind in ("acc", "gpu"):
-        rt.register_kernel("fft", kind, lambda ins: _jfft(ins[0]))
-        rt.register_kernel("ifft", kind, lambda ins: _jifft(ins[0]))
-        rt.register_kernel("zip", kind, lambda ins: _jzip(ins[0], ins[1]))
+    """Install the radar op registry into a batch runtime (compat shim —
+    sessions install the registry themselves)."""
+    rimms.default_registry.install(rt)
 
 
 def make_runtime(*, policy: str, scheduler: str = "round_robin",
@@ -75,6 +106,19 @@ def make_runtime(*, policy: str, scheduler: str = "round_robin",
     rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler)
     register_kernels(rt)
     return rt, ctx
+
+
+def make_session(*, policy: str = "rimms", scheduler: str = "heft",
+                 n_cpu: int = 1, accelerators: Sequence[str] = ("gpu0",),
+                 **kwargs) -> Session:
+    """A streaming :class:`Session` over an emulated SoC with the radar
+    op registry installed — the primary entry point for radar apps
+    (``session.context`` / ``session.runtime`` expose the lower
+    layers)."""
+    return Session.emulated(
+        policy=policy, scheduler=scheduler, n_cpu=n_cpu,
+        accelerators=tuple(accelerators), **kwargs,
+    )
 
 
 def run_pipeline(rt: Runtime, tasks, *, mode: str = "serial",
@@ -130,6 +174,23 @@ def build_2fzf(ctx: HeteContext, n: int, *, pins=(None,) * 4, seed=0):
         Task("ifft", [z], [out], pin=pins[3], name="ifft"),
     ]
     return {"a": a, "b": b, "out": out}, tasks
+
+
+def submit_2fzf(session: Session, n: int, *, pins=(None,) * 4, seed=0,
+                tag=""):
+    """The 2FZF chain (Fig 4b) through the streaming session API: four
+    submissions, zero explicit sync — ``out.result()`` is the only sync
+    point.  ``tag`` disambiguates task names when many clients submit
+    chains against one session (bench_stream)."""
+    rng = np.random.default_rng(seed)
+    a, b = session.malloc((n,), C64), session.malloc((n,), C64)
+    _fill(a.hete, rng)
+    _fill(b.hete, rng)
+    fa = session.submit("fft", [a], pin=pins[0], name=f"fftA{tag}")
+    fb = session.submit("fft", [b], pin=pins[1], name=f"fftB{tag}")
+    z = session.submit("zip", [fa, fb], pin=pins[2], name=f"zip{tag}")
+    out = session.submit("ifft", [z], pin=pins[3], name=f"ifft{tag}")
+    return {"a": a, "b": b, "fa": fa, "fb": fb, "z": z, "out": out}
 
 
 def build_3zip(ctx: HeteContext, n: int, *, pins=(None,) * 3, seed=0):

@@ -18,7 +18,7 @@ from repro.apps.radar import _fill
 from repro.core.hete import HeteContext, HeteData
 from repro.core.runtime import Task
 
-__all__ = ["build_fork_join", "build_diamonds"]
+__all__ = ["build_fork_join", "build_diamonds", "submit_fork_join"]
 
 C64 = np.complex64
 
@@ -73,6 +73,52 @@ def build_fork_join(
         level += 1
 
     return {"src": src, "out": branch_outs[0]}, tasks
+
+
+def submit_fork_join(
+    session,
+    *,
+    ways: int = 4,
+    n: int = 4096,
+    depth: int = 2,
+    seed: int = 0,
+) -> Dict[str, "BufferFuture"]:
+    """:func:`build_fork_join` through the streaming session API
+    (ISSUE 4): identical DAG structure, buffer sizes, fill seeds and
+    submission order, so a single-threaded session with static
+    ``round_robin`` placement is bit-identical — outputs *and* per-pair
+    copy counts — to batch ``run_graph``/serial ``run`` on the same
+    build.  Returns ``{"src", "out"}`` futures; ``out.result()`` is the
+    only sync point."""
+    if ways < 1 or ways & (ways - 1):
+        raise ValueError(f"ways must be a power of two, got {ways}")
+    rng = np.random.default_rng(seed)
+    src = session.malloc((n,), C64)
+    _fill(src.hete, rng)
+    fsrc = session.submit("fft", [src], name="src_fft")
+
+    branch_outs = []
+    for w in range(ways):
+        weight = session.malloc((n,), C64)
+        _fill(weight.hete, rng)
+        cur = session.submit("zip", [fsrc, weight], name=f"fork{w}_zip")
+        for d in range(depth):
+            op = "fft" if d % 2 == 0 else "ifft"
+            cur = session.submit(op, [cur], name=f"branch{w}_{op}{d}")
+        branch_outs.append(cur)
+
+    level = 0
+    while len(branch_outs) > 1:
+        nxt_outs = []
+        for j in range(0, len(branch_outs), 2):
+            nxt_outs.append(session.submit(
+                "zip", [branch_outs[j], branch_outs[j + 1]],
+                name=f"join{level}_{j // 2}",
+            ))
+        branch_outs = nxt_outs
+        level += 1
+
+    return {"src": src, "out": branch_outs[0]}
 
 
 def build_diamonds(

@@ -1,8 +1,9 @@
 """RIMMS core: allocators, hete_Data tracking, task runtime, KV page pool."""
 
 from .allocator import AllocError, BitsetAllocator, Extent, NextFitAllocator, make_allocator
-from .executor import GraphExecutor, WorkerPool
-from .graph import CostModel, TaskGraph, TaskNode, build_graph
+from .api import BufferFuture, OpRegistry, Session, default_registry, op
+from .executor import GraphExecutor, StreamExecutor, WorkerPool, replay_schedule
+from .graph import CostModel, GraphBuilder, TaskGraph, TaskNode, build_graph
 from .hete import (
     HeteContext, HeteData, PrefetchDeferred, default_context,
     hete_free, hete_malloc, hete_sync,
@@ -19,7 +20,9 @@ from .topology import (
 
 __all__ = [
     "AllocError", "BitsetAllocator", "Extent", "NextFitAllocator", "make_allocator",
-    "GraphExecutor", "WorkerPool", "CostModel", "TaskGraph", "TaskNode", "build_graph",
+    "BufferFuture", "OpRegistry", "Session", "default_registry", "op",
+    "GraphExecutor", "StreamExecutor", "WorkerPool", "replay_schedule",
+    "CostModel", "GraphBuilder", "TaskGraph", "TaskNode", "build_graph",
     "HeteContext", "HeteData", "PrefetchDeferred", "default_context",
     "hete_free", "hete_malloc", "hete_sync",
     "Timeline", "TimelineEvent", "TransferEvent", "TransferLedger", "Timer",

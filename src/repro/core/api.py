@@ -1,0 +1,484 @@
+"""Streaming session API — RIMMS's primary entry point (ISSUE 4).
+
+The paper's promise (§3.2) is that application code names *work* and
+*data* while the runtime owns placement, movement, and completion.  The
+batch entry points (:meth:`Runtime.run` / :meth:`Runtime.run_graph`)
+still made callers hand-assemble static ``Task`` lists, pick an
+execution mode, and ``hete_sync`` by hand.  This module is the
+redesigned front door:
+
+* :func:`op` — decorator registering a kernel *variant per PE kind*
+  into an :class:`OpRegistry` (``@rimms.op("fft", kinds=("cpu",))``);
+  a session installs the registry into its runtime, so applications
+  never call ``register_kernel`` directly;
+* :class:`Session` — deferred execution over a **live task DAG**:
+  :meth:`Session.malloc` and :meth:`Session.submit` return
+  :class:`BufferFuture` handles, each submission incrementally extends
+  the DAG (:class:`~repro.core.graph.GraphBuilder` resolves RAW/WAR/WAW
+  ordering from the buffers' read/write intervals), and the persistent
+  :class:`~repro.core.executor.StreamExecutor` consumes the stream
+  continuously — windowed HEFT placement over the ready frontier, no
+  global barrier;
+* :class:`BufferFuture` — a handle over a ``hete_Data`` buffer version:
+  ``future.result()`` / :meth:`Session.barrier` / ``with session:`` are
+  the *only* sync points; kernel exceptions propagate through futures
+  (a failure fails its dependent subtree, independent chains keep
+  flowing); :meth:`BufferFuture.free` is ``hete_free`` deferred to
+  after the stream's last use of the buffer.
+
+Example::
+
+    import numpy as np
+    from repro.core import api as rimms
+    import repro.apps.radar  # registers fft/ifft/zip kernel variants
+
+    with rimms.Session.emulated(accelerators=("gpu0", "gpu1")) as s:
+        x = s.malloc((1024,), np.complex64)
+        x.data[:] = make_signal()
+        f = s.submit("fft", [x])          # returns a BufferFuture
+        y = s.submit("ifft", [f])         # chains without waiting
+        out = y.result()                  # the only sync point
+
+Threads may submit concurrently against one session (multi-tenant
+streaming): submissions serialize at admission, placement and data
+movement stay runtime-owned, and each client blocks only on its own
+futures.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .executor import StreamExecutor
+from .graph import GraphBuilder
+from .hete import HeteContext, HeteData
+from .locations import HOST
+from .runtime import Runtime, Task, make_emulated_soc
+
+__all__ = ["OpRegistry", "op", "default_registry", "BufferFuture", "Session"]
+
+
+class OpRegistry:
+    """Kernel variants keyed on ``(op, pe_kind)`` — the dispatch table
+    the :func:`op` decorator fills and a :class:`Session` installs into
+    its :class:`~repro.core.runtime.Runtime`.
+
+    A variant is ``fn(inputs: list, **params) -> array | tuple`` exactly
+    like :meth:`Runtime.register_kernel` expects; registering the same
+    ``(op, kind)`` twice with a different function raises unless
+    ``replace=True`` (kernels are identity, not configuration).
+    """
+
+    def __init__(self) -> None:
+        self._variants: Dict[Tuple[str, str], Callable] = {}
+
+    def register(self, op_name: str, kind: str, fn: Callable, *,
+                 replace: bool = False) -> None:
+        key = (op_name, kind)
+        prev = self._variants.get(key)
+        if prev is not None and prev is not fn and not replace:
+            raise ValueError(
+                f"op variant {key} already registered "
+                f"({prev.__name__}); pass replace=True to override"
+            )
+        self._variants[key] = fn
+
+    def get(self, op_name: str, kind: str) -> Optional[Callable]:
+        return self._variants.get((op_name, kind))
+
+    def kinds(self, op_name: str) -> List[str]:
+        """PE kinds with a registered variant of ``op_name``."""
+        return sorted(k for (o, k) in self._variants if o == op_name)
+
+    def ops(self) -> List[str]:
+        return sorted({o for o, _ in self._variants})
+
+    def __len__(self) -> int:
+        return len(self._variants)
+
+    def install(self, rt: Runtime, *, missing_only: bool = False,
+                extend_supports: Sequence[str] = ()) -> None:
+        """Register every variant into ``rt``.  ``missing_only`` keeps
+        kernels the runtime already has (so a session never clobbers a
+        hand-registered override).  ``extend_supports`` names the
+        *general-purpose* PE kinds (typically ``("cpu", "gpu")``) whose
+        PEs additionally advertise every op they now have a kernel for —
+        restricted accelerator kinds (a zip engine is a zip engine) keep
+        the op sets their platform description declared."""
+        for (op_name, kind), fn in self._variants.items():
+            if missing_only and (op_name, kind) in rt._kernels:
+                continue
+            rt.register_kernel(op_name, kind, fn)
+        for pe in rt.pes:
+            if pe.kind in extend_supports:
+                extra = {o for (o, k) in self._variants if k == pe.kind}
+                pe.supports = frozenset(pe.supports | extra)
+
+
+#: process-default registry — the one bare ``@op`` fills and sessions
+#: install unless given their own.
+default_registry = OpRegistry()
+
+
+def op(name: str, *, kinds: Union[str, Sequence[str]],
+       registry: Optional[OpRegistry] = None,
+       replace: bool = False) -> Callable:
+    """Decorator: register the function as op ``name``'s kernel variant
+    for each PE kind in ``kinds``::
+
+        @rimms.op("fft", kinds=("acc", "gpu"))
+        def fft_device(ins):
+            return _jfft(ins[0])
+
+    The function is returned unchanged (still directly callable)."""
+    kind_list = (kinds,) if isinstance(kinds, str) else tuple(kinds)
+    if not kind_list:
+        raise ValueError(f"op {name!r} needs at least one PE kind")
+
+    def deco(fn: Callable) -> Callable:
+        reg = registry if registry is not None else default_registry
+        for k in kind_list:
+            reg.register(name, k, fn, replace=replace)
+        return fn
+
+    return deco
+
+
+class BufferFuture:
+    """A handle over a ``hete_Data`` buffer inside a streaming
+    :class:`Session` — the session API's unit of data.
+
+    Submitting a task that writes the buffer binds the returned future
+    to the buffer's new *version* (:class:`~repro.core.graph.GraphBuilder`
+    bumps it per write submission).  :meth:`result` synchronizes the
+    buffer: it waits for the buffer's last submitted writer (so a
+    resubmitted buffer resolves to its newest submitted content), then
+    returns the host-synced array.  A failed producing task — or a
+    failed transitive dependency — re-raises its exception here.
+    """
+
+    __slots__ = ("session", "hete", "version")
+
+    def __init__(self, session: "Session", hete: HeteData, *,
+                 version: int = 0) -> None:
+        self.session = session
+        self.hete = hete
+        self.version = version
+
+    # -- buffer surface ------------------------------------------------------
+    @property
+    def shape(self) -> tuple:
+        return self.hete.shape
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self.hete.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return self.hete.nbytes
+
+    @property
+    def data(self) -> np.ndarray:
+        """The raw host-resident field (paper semantics: reading it
+        without :meth:`result` may observe stale bytes — use it to fill
+        inputs before submission, :meth:`result` to read outputs)."""
+        return self.hete.data
+
+    # -- future surface ------------------------------------------------------
+    def done(self) -> bool:
+        """True when the buffer's last submitted writer completed or
+        failed (trivially True for never-written buffers)."""
+        target = self.session._last_writer(self.hete)
+        return target is None or self.session._stream.done(target)
+
+    def exception(self) -> Optional[BaseException]:
+        """The failure of the buffer's last submitted writer, if any
+        (non-blocking; None while pending or on success)."""
+        target = self.session._last_writer(self.hete)
+        if target is None:
+            return None
+        return self.session._stream.exception(target)
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Synchronize the buffer: wait for its last submitted writer,
+        re-raise its failure if it (or a transitive dependency) failed,
+        else ``hete_Sync`` and return the host array."""
+        self.session._wait_node(self.session._last_writer(self.hete), timeout)
+        return self.session.context.sync(self.hete)
+
+    def free(self) -> bool:
+        """``hete_free`` after the stream's last use (see
+        :meth:`Session.free`)."""
+        return self.session.free(self)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = "done" if self.done() else "pending"
+        return (f"BufferFuture(shape={self.hete.shape}, "
+                f"dtype={np.dtype(self.hete.dtype).name}, v{self.version}, "
+                f"{state})")
+
+
+class Session:
+    """Deferred-execution session — the primary RIMMS entry point.
+
+    ``Session(runtime)`` adopts an existing
+    :class:`~repro.core.runtime.Runtime` (the dispatch engine);
+    :meth:`Session.emulated` builds runtime + context over the emulated
+    SoC in one call.  On creation the session installs ``registry``
+    (default: :data:`default_registry`) into the runtime — kernels the
+    runtime already has win — and starts a
+    :class:`~repro.core.executor.StreamExecutor` on the runtime's
+    persistent worker pool.
+
+    Submission model: :meth:`submit` builds a task over
+    :class:`BufferFuture`/:class:`~repro.core.hete.HeteData` operands,
+    extends the live DAG, and admits it to the stream — returning output
+    futures immediately.  Sync points are ``future.result()``,
+    :meth:`barrier`, and ``with session:`` exit; nothing else blocks.
+    Any thread may submit; admission is serialized internally.
+    """
+
+    def __init__(
+        self,
+        runtime: Runtime,
+        *,
+        scheduler: Optional[str] = None,
+        prefetch: bool = True,
+        window: int = 64,
+        registry: Optional[OpRegistry] = None,
+    ) -> None:
+        self.runtime = runtime
+        self.context: HeteContext = runtime.context
+        reg = registry if registry is not None else default_registry
+        reg.install(runtime, missing_only=True,
+                    extend_supports=("cpu", "gpu"))
+        self.registry = reg
+        self.closed = False
+        self._builder = GraphBuilder()
+        self._events: Dict[int, threading.Event] = {}
+        self._node_exc: Dict[int, BaseException] = {}
+        self._uses: Dict[int, List[HeteData]] = {}  # node -> retained roots
+        self._seq = itertools.count()
+        self._stream = StreamExecutor(
+            runtime, scheduler=scheduler, prefetch=prefetch,
+            on_done=self._node_done, window=window,
+        )
+        # Submissions mutate the builder's node linkage (deps/dependents)
+        # that stream completion iterates: one reentrant lock serializes
+        # both (admit() re-enters it).
+        self._sublock = self._stream.state_lock
+
+    @classmethod
+    def emulated(
+        cls,
+        *,
+        policy: str = "rimms",
+        scheduler: str = "heft",
+        n_cpu: int = 1,
+        accelerators: Sequence[str] = ("gpu0",),
+        prefetch: bool = True,
+        window: int = 64,
+        registry: Optional[OpRegistry] = None,
+        **soc_kwargs: Any,
+    ) -> "Session":
+        """Session over a fresh emulated SoC (see
+        :func:`~repro.core.runtime.make_emulated_soc` for
+        ``soc_kwargs``: ``arena_bytes``, ``topology``, ``acc_ops``, …).
+        The default scheduler is the windowed ``heft`` — the streaming
+        placement the session exists for; pass ``"round_robin"`` for
+        bit-identical-to-serial static placement."""
+        pes, ctx = make_emulated_soc(
+            n_cpu=n_cpu, accelerators=tuple(accelerators), **soc_kwargs
+        )
+        rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler)
+        return cls(rt, prefetch=prefetch, window=window, registry=registry)
+
+    # -- allocation ----------------------------------------------------------
+    def malloc(self, shape, dtype=np.uint8) -> BufferFuture:
+        """``hete_Malloc`` returning a :class:`BufferFuture` (version 0:
+        the fresh host bytes are immediately valid — ``.data`` is
+        writable for input filling)."""
+        self._check_open()
+        return BufferFuture(self, self.context.malloc(shape, dtype))
+
+    def wrap(self, hd: HeteData) -> BufferFuture:
+        """Adopt an existing ``hete_Data`` buffer into the session (for
+        incremental ports of Task-list code)."""
+        return BufferFuture(self, hd)
+
+    def free(self, buf: Union[BufferFuture, HeteData]) -> bool:
+        """``hete_free`` with free-after-last-use semantics: frees the
+        root allocation immediately when no submitted-but-incomplete
+        task touches it, otherwise defers the free to the completion of
+        the last such task.  Returns True when freed immediately."""
+        hd = buf.hete if isinstance(buf, BufferFuture) else buf
+        return self.context.free_when_unused(hd)
+
+    # -- submission ----------------------------------------------------------
+    def submit(
+        self,
+        op_name: str,
+        inputs: Sequence[Union[BufferFuture, HeteData, np.ndarray]] = (),
+        *,
+        out: Union[None, BufferFuture, HeteData,
+                   Sequence[Union[BufferFuture, HeteData]]] = None,
+        out_shape: Optional[tuple] = None,
+        out_dtype: Optional[Any] = None,
+        n_out: int = 1,
+        pin: Optional[str] = None,
+        name: str = "",
+        **params: Any,
+    ) -> Union[BufferFuture, Tuple[BufferFuture, ...]]:
+        """Submit one op invocation to the stream; returns the output
+        :class:`BufferFuture` (or a tuple when there are several).
+
+        ``inputs`` may mix futures, raw ``hete_Data`` buffers, and numpy
+        arrays (arrays are hete_malloc'ed and filled on the spot).
+        Outputs default to one fresh buffer shaped like the first input
+        (override with ``out_shape``/``out_dtype``/``n_out``, or pass
+        existing buffers via ``out=`` to write in place).  ``pin`` names
+        a PE for CPU-ACC style placement studies; ``params`` are
+        forwarded to the kernel.
+
+        Never blocks on data: dependencies are resolved from the
+        buffers' read/write intervals and the task runs when its
+        producers complete.  Scheduling and kernel failures surface
+        through the returned futures, not here."""
+        self._check_open()
+        ins_hd = [self._coerce(x) for x in inputs]
+        outs_hd, single = self._normalize_outs(
+            ins_hd, out, out_shape, out_dtype, n_out)
+        with self._sublock:
+            task = Task(
+                op_name, ins_hd, outs_hd, params=dict(params), pin=pin,
+                name=name or f"{op_name}#{next(self._seq)}",
+            )
+            node = self._builder.add(task)
+            i = node.index
+            self._events[i] = threading.Event()
+            roots: List[HeteData] = []
+            seen: set = set()
+            for hd in ins_hd + outs_hd:
+                r = hd.root
+                if id(r) not in seen:
+                    seen.add(id(r))
+                    roots.append(r)
+                    self.context.retain_use(r)
+            self._uses[i] = roots
+            futures = tuple(
+                BufferFuture(self, hd, version=self._builder.version_of(hd))
+                for hd in outs_hd
+            )
+            self._stream.admit(node)
+        return futures[0] if single else futures
+
+    def _coerce(self, x) -> HeteData:
+        if isinstance(x, BufferFuture):
+            if x.session is not self:
+                raise ValueError("BufferFuture belongs to another session")
+            return x.hete
+        if isinstance(x, HeteData):
+            return x
+        arr = np.asarray(x)
+        hd = self.context.malloc(arr.shape, arr.dtype)
+        hd.copies[HOST][...] = arr
+        return hd
+
+    def _normalize_outs(
+        self, ins_hd, out, out_shape, out_dtype, n_out
+    ) -> Tuple[List[HeteData], bool]:
+        if out is not None:
+            outs = [out] if isinstance(out, (BufferFuture, HeteData)) else list(out)
+            return [self._coerce(o) for o in outs], not isinstance(out, (list, tuple))
+        if out_shape is None or out_dtype is None:
+            if not ins_hd:
+                raise ValueError(
+                    "submit() with no inputs needs explicit out_shape "
+                    "and out_dtype (nothing to infer the output from)"
+                )
+            # `is None`, not truthiness: shape () is a valid 0-d scalar
+            if out_shape is None:
+                out_shape = ins_hd[0].shape
+            if out_dtype is None:
+                out_dtype = ins_hd[0].dtype
+        return (
+            [self.context.malloc(out_shape, out_dtype) for _ in range(n_out)],
+            n_out == 1,
+        )
+
+    # -- completion plumbing -------------------------------------------------
+    def _node_done(self, index: int, exc: Optional[BaseException]) -> None:
+        """StreamExecutor completion callback (under the stream lock):
+        resolve the node's futures and release its buffer lifecycles —
+        a deferred :meth:`free` fires here when this was the buffer's
+        last in-flight use."""
+        if exc is not None:
+            self._node_exc[index] = exc
+        for r in self._uses.pop(index, ()):
+            self.context.release_use(r)
+        ev = self._events.get(index)
+        if ev is not None:
+            ev.set()
+
+    def _last_writer(self, hd: HeteData) -> Optional[int]:
+        with self._sublock:
+            return self._builder.last_writer(hd)
+
+    def _wait_node(self, index: Optional[int],
+                   timeout: Optional[float] = None) -> None:
+        if index is None:
+            return
+        ev = self._events[index]
+        if not ev.wait(timeout):
+            raise TimeoutError(f"task #{index} still pending after {timeout}s")
+        exc = self._node_exc.get(index)
+        if exc is not None:
+            self._stream.mark_observed(index)
+            raise exc
+
+    # -- sync points ---------------------------------------------------------
+    def barrier(self, timeout: Optional[float] = None) -> None:
+        """Wait for every submitted task to complete; re-raise the first
+        failure not already observed through a future's ``result()``."""
+        self._stream.barrier(timeout)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        try:
+            if exc_type is None:
+                self.barrier()
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        """Drain the stream and stop accepting submissions (idempotent).
+        The runtime and its worker pool stay usable — call
+        :meth:`Runtime.close` to release the threads."""
+        if not self.closed:
+            self.closed = True
+            self._stream.close()
+
+    def _check_open(self) -> None:
+        if self.closed:
+            raise RuntimeError("session is closed")
+
+    # -- evidence ------------------------------------------------------------
+    @property
+    def ledger(self):
+        """The context's transfer ledger (copy counts, modeled seconds)."""
+        return self.context.ledger
+
+    def report(self) -> Dict[str, Any]:
+        """Schedule evidence for the stream so far.  ``makespan_model``
+        and ``timeline`` come from the deterministic replay
+        (:func:`~repro.core.executor.replay_schedule`) — call at a sync
+        point (after :meth:`barrier`) for exact, machine-independent
+        modeled metrics."""
+        return self._stream.report()

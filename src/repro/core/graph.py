@@ -29,7 +29,7 @@ import dataclasses
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
-__all__ = ["TaskNode", "TaskGraph", "build_graph", "CostModel"]
+__all__ = ["TaskNode", "TaskGraph", "GraphBuilder", "build_graph", "CostModel"]
 
 
 @dataclasses.dataclass
@@ -100,26 +100,67 @@ def _covers(a: Tuple[int, int], b: Tuple[int, int]) -> bool:
     return a[0] <= b[0] and b[1] <= a[1]
 
 
-def build_graph(tasks: Sequence["Task"]) -> TaskGraph:
-    """Build the RAW/WAR/WAW dependency DAG from ``tasks``' read/write
-    sets.  Deps always point to earlier submissions, so the result is a
-    DAG by construction.
-    """
-    nodes = [TaskNode(i, t) for i, t in enumerate(tasks)]
-    # per root allocation: live accesses as (interval, node_index)
-    writes: Dict[int, List[Tuple[Tuple[int, int], int]]] = {}
-    reads: Dict[int, List[Tuple[Tuple[int, int], int]]] = {}
+class GraphBuilder:
+    """Incremental RAW/WAR/WAW dependency tracking (ISSUE 4).
 
-    for node in nodes:
-        i = node.index
-        for hd in node.task.inputs:
+    The streaming session front-end (:mod:`repro.core.api`) submits tasks
+    one at a time against *live* buffers; this builder extends the DAG
+    per submission — :meth:`add` resolves the new task's dependencies
+    from the live access state and updates it, in O(live accesses on the
+    touched buffers), never re-scanning earlier tasks.  Batch
+    :func:`build_graph` is a loop over :meth:`add`, so both entry points
+    produce identical DAGs by construction.
+
+    Dependency state is keyed on **HeteData versions**: every write
+    submission bumps the target root's version counter, and the builder
+    remembers which node produced each buffer's current version (the
+    live-writer set per byte interval).  A
+    :class:`~repro.core.api.BufferFuture` binds to the (buffer, version)
+    pair its producing task will publish.
+
+    Not thread-safe by itself — the session serializes :meth:`add` under
+    its submission lock (admission order must equal node order).
+    """
+
+    def __init__(self) -> None:
+        self.nodes: List[TaskNode] = []
+        # per root allocation: live accesses as (interval, node_index)
+        self._writes: Dict[int, List[Tuple[Tuple[int, int], int]]] = {}
+        self._reads: Dict[int, List[Tuple[Tuple[int, int], int]]] = {}
+        # id(root) -> write version (0 = the initial host bytes); bumped
+        # once per writing task at *submission* time
+        self._versions: Dict[int, int] = {}
+        # id(root) -> index of the node that wrote it last (any interval)
+        self._last_writer: Dict[int, int] = {}
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def version_of(self, hd: "HeteData") -> int:
+        """Current submitted write version of ``hd``'s root (0 before any
+        writer was submitted)."""
+        return self._versions.get(id(hd.root), 0)
+
+    def last_writer(self, hd: "HeteData") -> Optional[int]:
+        """Index of the last submitted node writing ``hd``'s root, or
+        None if the buffer was never a task output."""
+        return self._last_writer.get(id(hd.root))
+
+    def add(self, task: "Task") -> TaskNode:
+        """Append ``task``, resolving its deps against the live access
+        state.  Deps always point to earlier submissions, so the graph
+        stays a DAG by construction."""
+        i = len(self.nodes)
+        node = TaskNode(i, task)
+        writes, reads = self._writes, self._reads
+        for hd in task.inputs:
             key, iv = id(hd.root), hd.byte_interval()
             # RAW: order after every live writer touching this interval
             for w_iv, w_idx in writes.get(key, ()):
                 if _overlaps(iv, w_iv):
                     node.deps.add(w_idx)
             reads.setdefault(key, []).append((iv, i))
-        for hd in node.task.outputs:
+        for hd in task.outputs:
             key, iv = id(hd.root), hd.byte_interval()
             for w_iv, w_idx in writes.get(key, ()):  # WAW
                 if w_idx != i and _overlaps(iv, w_iv):
@@ -137,11 +178,27 @@ def build_graph(tasks: Sequence["Task"]) -> TaskGraph:
                 (r_iv, r_idx) for r_iv, r_idx in reads.get(key, ())
                 if r_idx == i or not _covers(iv, r_iv)
             ]
-
-    for node in nodes:
+            self._versions[key] = self._versions.get(key, 0) + 1
+            self._last_writer[key] = i
+        self.nodes.append(node)
         for d in node.deps:
-            nodes[d].dependents.add(node.index)
-    return TaskGraph(nodes)
+            self.nodes[d].dependents.add(i)
+        return node
+
+    def graph(self) -> TaskGraph:
+        """The DAG over everything added so far (shares the node list —
+        later :meth:`add` calls keep extending it)."""
+        return TaskGraph(self.nodes)
+
+
+def build_graph(tasks: Sequence["Task"]) -> TaskGraph:
+    """Build the RAW/WAR/WAW dependency DAG from ``tasks``' read/write
+    sets (batch intake: one :class:`GraphBuilder` pass in submission
+    order)."""
+    builder = GraphBuilder()
+    for t in tasks:
+        builder.add(t)
+    return builder.graph()
 
 
 # ---------------------------------------------------------------------------

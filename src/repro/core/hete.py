@@ -40,6 +40,14 @@ manager) bound eviction; the graph executor additionally *protects*
 bytes that queued tasks still read so prefetch never spills them
 (prefetch under pressure defers instead — :class:`PrefetchDeferred`).
 
+Buffer↔future lifecycle (ISSUE 4): the streaming session API
+(:mod:`repro.core.api`) hands out :class:`BufferFuture` handles over
+``hete_Data`` buffers.  ``retain_use``/``release_use`` refcount
+submitted-but-incomplete tasks per root allocation, and
+``free_when_unused`` is ``hete_free`` deferred to after the last such
+use — the session frees buffers the moment the stream no longer touches
+them, without the application ever synchronizing.
+
 Interconnect topology (ISSUE 3): when the ledger's bandwidth model is a
 :class:`~repro.core.topology.TopologyBandwidthModel`, every copy
 ``stage`` performs is priced and recorded along its *route* — one ledger
@@ -150,6 +158,11 @@ class HeteData:
     last_touch: Dict[Location, int] = dataclasses.field(default_factory=dict)
     eviction_epoch: int = 0
     freed: bool = False
+    # buffer↔future lifecycle (ISSUE 4, kept on the ROOT): number of
+    # submitted-but-incomplete tasks touching this allocation, and
+    # whether a deferred hete_free fires when that count drains
+    pending_uses: int = 0
+    free_pending: bool = False
     # set when a fragment was written since the parent's copy was last
     # coherent — a whole-parent read gathers fragments first (see
     # HeteContext._gather_fragments)
@@ -318,6 +331,45 @@ class HeteContext:
                 root.pins.pop(loc)
             else:
                 root.pins[loc] = n - 1
+
+    # -- buffer↔future lifecycle (ISSUE 4) -----------------------------------
+    def retain_use(self, hd: HeteData) -> None:
+        """Count one submitted-but-incomplete task touching ``hd``'s root
+        allocation.  The streaming session retains every distinct input/
+        output root at submission and releases it at task completion, so
+        a deferred free (:meth:`free_when_unused`) can never reclaim
+        bytes an in-flight task still reads or writes."""
+        with self._arena_lock:
+            hd.root.pending_uses += 1
+
+    def release_use(self, hd: HeteData) -> None:
+        """Balance one :meth:`retain_use`; fires the deferred free when
+        this was the last in-flight use of a buffer already marked via
+        :meth:`free_when_unused`."""
+        root = hd.root
+        with self._arena_lock:
+            if root.pending_uses <= 0:
+                raise ValueError("release_use without matching retain_use")
+            root.pending_uses -= 1
+            if (root.free_pending and root.pending_uses == 0
+                    and not root.freed):
+                root.free_pending = False
+                self.free(root)
+
+    def free_when_unused(self, hd: HeteData) -> bool:
+        """``hete_Free`` deferred to after the last in-flight use: frees
+        immediately (returning True) when no submitted task still touches
+        the root allocation, otherwise arms a deferred free that the
+        final :meth:`release_use` performs (returning False)."""
+        root = hd.root
+        with self._arena_lock:
+            if root.freed:
+                raise AllocError("double hete_free")
+            if root.pending_uses > 0:
+                root.free_pending = True
+                return False
+            self.free(root)
+            return True
 
     def protect(self, hd: HeteData, loc: Location) -> None:
         """Refcounted *soft* claim: a queued task still reads these bytes

@@ -15,13 +15,24 @@ Two memory policies, both first-class so every experiment reports the pair:
   check, direct src→PE copy only when the flag names another location,
   output flag update to the executing PE (Fig 1b).
 
-Two execution modes share the same stage → execute → commit pipeline:
+The **primary public entry point is the streaming session API**
+(:mod:`repro.core.api`, ISSUE 4): ``@rimms.op``-registered kernels,
+``Session.malloc``/``Session.submit`` returning
+:class:`~repro.core.api.BufferFuture` handles, and the persistent
+:class:`~repro.core.executor.StreamExecutor` consuming the task stream
+continuously.  This class is the **dispatch engine behind it** — the
+session drives the same stage → execute → commit pipeline, scheduler
+cost bases, and kernel registry defined here.
+
+Two batch execution modes are kept as thin compat wrappers over that
+pipeline:
 
 * :meth:`Runtime.run` — serial, submission order (CEDR's API-level
   serialization);
-* :meth:`Runtime.run_graph` — the async task-graph executor
-  (:mod:`repro.core.executor`): automatic DAG construction, one worker
-  per PE, input prefetch overlapping transfers with compute.
+* :meth:`Runtime.run_graph` — the batch task-graph executor
+  (:class:`~repro.core.executor.GraphExecutor`): automatic DAG
+  construction, one worker per PE, input prefetch overlapping transfers
+  with compute.
 
 PEs are emulated on this CPU-only box: a "cpu" PE executes numpy
 callables against host memory; accelerator PEs ("fft_acc", "zip_acc",
@@ -135,6 +146,22 @@ class Runtime:
             self._pool_finalizer.detach()
             self._worker_pool.shutdown()
             self._worker_pool = None
+
+    def reset_stats(self) -> None:
+        """Clear per-run diagnostics and dispatch state: the task log,
+        round-robin rotation, timeline, and last modeled makespan/report.
+        Called at the start of every :meth:`run`/:meth:`run_graph`, so
+        repeated batch runs neither accumulate log entries nor leak
+        round-robin placement state across runs (ISSUE 4 satellite) —
+        ``task_log`` after a run is exactly that run's placements, and
+        identical task lists place identically on every run.  Streaming
+        sessions deliberately do *not* reset between barriers: the
+        stream is one continuous run."""
+        self.task_log = []
+        self._rr_state = {}
+        self.timeline = Timeline()
+        self.last_makespan_model = 0.0
+        self.last_report = None
 
     # -- registration -------------------------------------------------------
     def register_kernel(self, op: str, pe_kind: str, fn: Callable) -> None:
@@ -298,29 +325,43 @@ class Runtime:
         return model_s, ctx.take_spill_seconds()
 
     def _add_transfer_lanes(self, topo, task: Task, moves: Sequence[tuple],
-                            start: float) -> None:
+                            start: float) -> float:
         """Record per-link :class:`TransferEvent` lanes for ``moves``
-        issued sequentially from modeled time ``start`` (serial mode —
-        contention state advances so lanes never overlap on one link)."""
+        issued *concurrently* at modeled time ``start``, walking each
+        copy's route through per-link busy-until contention (ISSUE 4
+        satellite): copies on disjoint routes overlap, copies sharing a
+        link queue behind each other — and behind earlier tasks' traffic,
+        since link state persists across the run.  This is exactly the
+        pricing the graph executor's replay applies, so serial vs graph
+        topology comparisons are apples-to-apples (previously serial
+        summed uncontended store-and-forward hop times).  Returns the
+        modeled staging duration (last byte delivered − ``start``)."""
         from .instrument import TransferEvent
 
-        t = start
+        end_max = start
         for src, dst, nbytes in moves:
-            _, end, hops = topo.transfer(src, dst, nbytes, at=t, commit=True)
+            _, end, hops = topo.transfer(src, dst, nbytes, at=start,
+                                         commit=True)
             for link, hs, he in hops:
                 self.timeline.add_transfer(TransferEvent(
                     link=link.label, task=task.name or task.op,
                     nbytes=nbytes, model_start=hs, model_end=he,
                 ))
-            t = end
+            end_max = max(end_max, end)
+        return end_max - start
 
     # -- execution --------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> float:
         """Execute tasks serially in submission order (data deps are
         submission-ordered by the apps, matching CEDR's API-level
         serialization).  Returns wall seconds; fills :attr:`timeline` and
-        :attr:`last_makespan_model` for comparison against graph mode."""
-        self.timeline = Timeline()
+        :attr:`last_makespan_model` for comparison against graph mode.
+
+        Compat wrapper: new code should prefer the streaming session API
+        (:class:`repro.core.api.Session`); this remains the reference
+        serial dispatch every equivalence/copy-count claim compares
+        against."""
+        self.reset_stats()
         topo = getattr(self.context.ledger.bandwidth_model, "topology", None)
         if topo is not None:
             topo.reset_contention()
@@ -337,17 +378,19 @@ class Runtime:
                 self._unpin_inputs(task, pe.location)
             w1 = time.perf_counter()
             spill_s = sp_s + sp2_s
+            stage_m = tr_s
             if topo is not None:
-                # Routed transfer lanes over modeled time: serial staging
-                # walks each copy's hops back-to-back from model_t.
-                self._add_transfer_lanes(topo, task, moves, model_t)
+                # Routed transfer lanes over modeled time: this task's
+                # copies issue concurrently at model_t and queue on
+                # shared links (per-link contention, like graph replay).
+                stage_m = self._add_transfer_lanes(topo, task, moves, model_t)
             # Model simulation uses the static compute estimate so serial
             # and graph modeled makespans are directly comparable (see
             # CostModel.prior_estimate).  Spill stalls (eviction
             # write-backs under capacity pressure) extend the task's
             # modeled interval exactly like transfers do.
             comp_m = self.cost_model.prior_estimate(task.op, pe.kind, task.in_bytes)
-            dur_m = tr_s + spill_s + comp_m + out_s
+            dur_m = stage_m + spill_s + comp_m + out_s
             self.timeline.add(TimelineEvent(
                 task=task.name or task.op, pe=pe.name,
                 wall_start=w0 - t0, wall_end=w1 - t0,
@@ -376,9 +419,14 @@ class Runtime:
 
         Returns wall seconds; :attr:`timeline`, :attr:`last_makespan_model`
         and :attr:`last_report` carry the schedule evidence.
+
+        Compat wrapper: batch intake over the same worker pool the
+        streaming session API (:class:`repro.core.api.Session`) drives
+        continuously — prefer the session for new code.
         """
         from .executor import GraphExecutor  # local import: avoids cycle
 
+        self.reset_stats()
         ex = GraphExecutor(self, scheduler=scheduler, prefetch=prefetch)
         report = ex.run(tasks)
         self.last_report = report
