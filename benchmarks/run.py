@@ -1,43 +1,80 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+``--json-dir DIR`` additionally emits ``BENCH_*.json`` records (full
+depth) for the json-capable benches — the nightly CI workflow uploads
+them and feeds them to ``check_regression.py --report`` so modeled-
+metric drift is visible between PRs, not only at gate-failure time.
 """
 
 import argparse
+from pathlib import Path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: 2fft,2fzf,alloc,overhead,3zip,apps,"
-                         "marking,roofline,graph,pressure,topology,stream")
+                         "marking,roofline,graph,pressure,topology,stream,"
+                         "multitenant")
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="write BENCH_*.json records for json-capable "
+                         "benches into DIR")
     args = ap.parse_args()
     from . import (bench_2fft, bench_2fzf, bench_3zip, bench_alloc,
-                   bench_apps, bench_graph, bench_marking, bench_overhead,
-                   bench_pressure, bench_roofline, bench_stream,
-                   bench_topology)
+                   bench_apps, bench_graph, bench_marking,
+                   bench_multitenant, bench_overhead, bench_pressure,
+                   bench_roofline, bench_stream, bench_topology)
+
+    def graph(jp):
+        bench_graph.run()
+        if jp:  # the graph record is the (deterministic) smoke gate's
+            bench_graph.smoke(json_path=jp)
+
     benches = {
-        "alloc": bench_alloc.run,
-        "overhead": lambda: bench_overhead.run(n_calls=200_000),
-        "2fft": bench_2fft.run,
-        "2fzf": bench_2fzf.run,
-        "3zip": bench_3zip.run,
-        "apps": bench_apps.run,
-        "marking": bench_marking.run,
-        "roofline": bench_roofline.run,
-        "graph": bench_graph.run,
-        "pressure": lambda: bench_pressure.run_pressure(
-            ways=8, n=1 << 14, json_path=None, smoke=False),
-        "topology": bench_topology.run,
-        "stream": bench_stream.run,
+        "alloc": lambda jp: bench_alloc.run(),
+        "overhead": lambda jp: bench_overhead.run(n_calls=200_000),
+        "2fft": lambda jp: bench_2fft.run(),
+        "2fzf": lambda jp: bench_2fzf.run(),
+        "3zip": lambda jp: bench_3zip.run(),
+        "apps": lambda jp: bench_apps.run(),
+        "marking": lambda jp: bench_marking.run(),
+        "roofline": lambda jp: bench_roofline.run(),
+        "graph": graph,
+        "pressure": lambda jp: bench_pressure.run_pressure(
+            ways=8, n=1 << 14, json_path=jp, smoke=False),
+        "topology": lambda jp: bench_topology.run_topology(
+            ways=bench_topology.WAYS, n=bench_topology.N,
+            depth=bench_topology.DEPTH, json_path=jp, smoke=False),
+        "stream": lambda jp: bench_stream.run_stream(
+            clients=bench_stream.CLIENTS, chains=bench_stream.CHAINS,
+            n=bench_stream.N, json_path=jp, smoke=False),
+        "multitenant": lambda jp: bench_multitenant.run_multitenant(
+            n=bench_multitenant.N,
+            light_chains=bench_multitenant.LIGHT_CHAINS,
+            heavy_chains=bench_multitenant.HEAVY_CHAINS,
+            json_path=jp, smoke=False),
+    }
+    json_names = {
+        "graph": "BENCH_graph.json",
+        "pressure": "BENCH_pressure.json",
+        "topology": "BENCH_topology.json",
+        "stream": "BENCH_stream.json",
+        "multitenant": "BENCH_multitenant.json",
     }
     only = set(args.only.split(",")) if args.only else None
+    json_dir = Path(args.json_dir) if args.json_dir else None
+    if json_dir:
+        json_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", flush=True)
-        fn()
+        jp = (str(json_dir / json_names[name])
+              if json_dir and name in json_names else None)
+        fn(jp)
 
 
 if __name__ == "__main__":

@@ -82,7 +82,7 @@ def main():
     print(f"  {rep['n_tasks']} tasks streamed, modeled makespan "
           f"{rep['makespan_model']*1e3:.3f} ms, per-PE busy: "
           + ", ".join(f"{pe}={s*1e3:.3f}ms"
-                      for pe, s in sorted(rep['per_pe_busy_model_s'].items())))
+                      for pe, s in sorted(rep["per_pe_busy_model_s"].items())))
     print("  stream schedule (modeled Gantt):")
     print(rep["timeline"].gantt(64))
     session.close()

@@ -14,8 +14,7 @@ tests; the emulated SoC uses the XLA path for speed).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ import numpy as np
 from repro.core import api as rimms
 from repro.core.api import Session
 from repro.core.hete import HeteContext, HeteData
-from repro.core.runtime import PE, Runtime, Task, make_emulated_soc
+from repro.core.runtime import Runtime, Task, make_emulated_soc
 
 __all__ = [
     "register_kernels", "build_2fft", "build_2fzf", "build_3zip",

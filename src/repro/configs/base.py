@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "get_config", "list_archs", "cells_for"]
 

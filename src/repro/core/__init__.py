@@ -1,7 +1,10 @@
 """RIMMS core: allocators, hete_Data tracking, task runtime, KV page pool."""
 
 from .allocator import AllocError, BitsetAllocator, Extent, NextFitAllocator, make_allocator
-from .api import BufferFuture, OpRegistry, Session, default_registry, op
+from .api import (
+    BufferFuture, OpRegistry, Session, SessionClient, SessionClosedError,
+    default_registry, op,
+)
 from .executor import GraphExecutor, StreamExecutor, WorkerPool, replay_schedule
 from .graph import CostModel, GraphBuilder, TaskGraph, TaskNode, build_graph
 from .hete import (
@@ -9,9 +12,14 @@ from .hete import (
     hete_free, hete_malloc, hete_sync,
 )
 from .instrument import (
-    Timeline, TimelineEvent, TransferEvent, TransferLedger, Timer, ledger,
+    Timeline, TimelineEvent, TransferEvent, TransferLedger, Timer,
+    jain_index, ledger,
 )
 from .locations import HOST, BandwidthModel, Location
+from .qos import (
+    BackpressureFull, ClientState, QoSManager, QuotaExceeded,
+    admission_cost, fair_replay,
+)
 from .paged_kv import PagedKVPool, gather_kv, init_pool_arrays, write_token
 from .runtime import PE, Runtime, Task, make_emulated_soc
 from .topology import (
@@ -20,7 +28,10 @@ from .topology import (
 
 __all__ = [
     "AllocError", "BitsetAllocator", "Extent", "NextFitAllocator", "make_allocator",
-    "BufferFuture", "OpRegistry", "Session", "default_registry", "op",
+    "BufferFuture", "OpRegistry", "Session", "SessionClient",
+    "SessionClosedError", "default_registry", "op",
+    "BackpressureFull", "ClientState", "QoSManager", "QuotaExceeded",
+    "admission_cost", "fair_replay", "jain_index",
     "GraphExecutor", "StreamExecutor", "WorkerPool", "replay_schedule",
     "CostModel", "GraphBuilder", "TaskGraph", "TaskNode", "build_graph",
     "HeteContext", "HeteData", "PrefetchDeferred", "default_context",

@@ -43,6 +43,18 @@ Threads may submit concurrently against one session (multi-tenant
 streaming): submissions serialize at admission, placement and data
 movement stay runtime-owned, and each client blocks only on its own
 futures.
+
+Multi-tenant QoS (ISSUE 5): every submission belongs to a *client* — an
+explicit :meth:`Session.client` handle or an implicit per-thread one.
+Each client has a bounded in-flight window (``submit`` blocks when it is
+full, or raises :class:`~repro.core.qos.BackpressureFull` under
+``nowait=True``), waiting submissions are admitted by a weighted
+deficit-round-robin (:class:`~repro.core.qos.QoSManager`), device-arena
+reservations can be quota'd per tenant
+(:class:`~repro.core.qos.QuotaExceeded` fails only the offending
+tenant), and :meth:`Session.qos_report` /
+:meth:`Session.fairness_report` expose deterministic per-client latency
+and Jain's-index fairness evidence.
 """
 
 from __future__ import annotations
@@ -57,9 +69,17 @@ from .executor import StreamExecutor
 from .graph import GraphBuilder
 from .hete import HeteContext, HeteData
 from .locations import HOST
+from .qos import QoSManager, admission_cost
 from .runtime import Runtime, Task, make_emulated_soc
 
-__all__ = ["OpRegistry", "op", "default_registry", "BufferFuture", "Session"]
+__all__ = ["OpRegistry", "op", "default_registry", "BufferFuture",
+           "Session", "SessionClient", "SessionClosedError"]
+
+
+class SessionClosedError(RuntimeError):
+    """The session is closed (explicitly, or by ``with`` exit): it no
+    longer accepts ``malloc``/``submit``.  Raised instead of silently
+    enqueueing onto a drained stream or a dead worker pool."""
 
 
 class OpRegistry:
@@ -161,13 +181,17 @@ class BufferFuture:
     failed transitive dependency — re-raises its exception here.
     """
 
-    __slots__ = ("session", "hete", "version")
+    __slots__ = ("session", "hete", "version", "node")
 
     def __init__(self, session: "Session", hete: HeteData, *,
-                 version: int = 0) -> None:
+                 version: int = 0, node: Optional[int] = None) -> None:
         self.session = session
         self.hete = hete
         self.version = version
+        #: index of the producing task's node in the stream (None for a
+        #: fresh malloc) — keys into the per-task ``finish``/``release``
+        #: times of :meth:`Session.qos_report`
+        self.node = node
 
     # -- buffer surface ------------------------------------------------------
     @property
@@ -223,6 +247,48 @@ class BufferFuture:
                 f"{state})")
 
 
+class SessionClient:
+    """A named tenant handle over a :class:`Session` (ISSUE 5).
+
+    Carries the client's QoS state (weight, in-flight window, optional
+    per-arena quota) and attributes every ``malloc``/``submit`` made
+    through it.  Obtained from :meth:`Session.client`; threads that
+    submit directly on the session get an implicit per-thread client
+    with default QoS settings.
+    """
+
+    __slots__ = ("session", "state")
+
+    def __init__(self, session: "Session", state) -> None:
+        self.session = session
+        self.state = state
+
+    @property
+    def name(self) -> str:
+        return self.state.name
+
+    def malloc(self, shape, dtype=np.uint8) -> BufferFuture:
+        """:meth:`Session.malloc` with the allocation charged to this
+        tenant's arena quota."""
+        return self.session.malloc(shape, dtype, client=self)
+
+    def submit(self, op_name: str, inputs=(), *, nowait: bool = False,
+               **kwargs) -> Union[BufferFuture, Tuple[BufferFuture, ...]]:
+        """:meth:`Session.submit` under this client's backpressure
+        window and DRR weight.  ``nowait=True`` raises
+        :class:`~repro.core.qos.BackpressureFull` instead of blocking
+        when the window is full."""
+        return self.session.submit(op_name, inputs, client=self,
+                                   nowait=nowait, **kwargs)
+
+    def free(self, buf) -> bool:
+        return self.session.free(buf)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"SessionClient({self.name!r}, weight={self.state.weight}, "
+                f"window={self.state.window})")
+
+
 class Session:
     """Deferred-execution session — the primary RIMMS entry point.
 
@@ -251,6 +317,9 @@ class Session:
         prefetch: bool = True,
         window: int = 64,
         registry: Optional[OpRegistry] = None,
+        qos: Optional[QoSManager] = None,
+        client_window: int = 64,
+        global_window: Optional[int] = None,
     ) -> None:
         self.runtime = runtime
         self.context: HeteContext = runtime.context
@@ -259,11 +328,20 @@ class Session:
                     extend_supports=("cpu", "gpu"))
         self.registry = reg
         self.closed = False
+        # Multi-tenant QoS (ISSUE 5): per-client backpressure windows +
+        # weighted DRR admission.  ``client_window`` is the default
+        # in-flight bound per client; ``global_window`` optionally caps
+        # the whole admitted frontier.
+        self.qos = qos if qos is not None else QoSManager(
+            default_window=client_window, global_window=global_window)
         self._builder = GraphBuilder()
         self._events: Dict[int, threading.Event] = {}
         self._node_exc: Dict[int, BaseException] = {}
         self._uses: Dict[int, List[HeteData]] = {}  # node -> retained roots
+        self._node_client: Dict[int, Any] = {}  # node -> ClientState
+        self._tls = threading.local()  # .client: implicit per-thread client
         self._seq = itertools.count()
+        self._client_seq = itertools.count()
         self._stream = StreamExecutor(
             runtime, scheduler=scheduler, prefetch=prefetch,
             on_done=self._node_done, window=window,
@@ -284,6 +362,9 @@ class Session:
         prefetch: bool = True,
         window: int = 64,
         registry: Optional[OpRegistry] = None,
+        qos: Optional[QoSManager] = None,
+        client_window: int = 64,
+        global_window: Optional[int] = None,
         **soc_kwargs: Any,
     ) -> "Session":
         """Session over a fresh emulated SoC (see
@@ -296,15 +377,59 @@ class Session:
             n_cpu=n_cpu, accelerators=tuple(accelerators), **soc_kwargs
         )
         rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler)
-        return cls(rt, prefetch=prefetch, window=window, registry=registry)
+        return cls(rt, prefetch=prefetch, window=window, registry=registry,
+                   qos=qos, client_window=client_window,
+                   global_window=global_window)
+
+    # -- tenants (ISSUE 5) ---------------------------------------------------
+    def client(self, name: Optional[str] = None, *,
+               weight: Optional[float] = None,
+               window: Optional[int] = None,
+               quota_bytes: Optional[int] = None) -> SessionClient:
+        """A named tenant handle: its submissions run under ``weight``
+        (DRR admission share), a bounded in-flight ``window``
+        (backpressure), and an optional per-device-arena reservation
+        ``quota_bytes``.  Calling again with the same name updates the
+        passed settings and returns a handle to the same client."""
+        if name is None:
+            name = f"client{next(self._client_seq)}"
+        state = self.qos.client(name, weight=weight, window=window,
+                                quota_bytes=quota_bytes)
+        if quota_bytes is not None:
+            self.context.set_quota(name, quota_bytes)
+        return SessionClient(self, state)
+
+    def _thread_client(self) -> SessionClient:
+        """The implicit per-thread client: threads that submit directly
+        on the session are tenants too (named after the thread), so
+        backpressure and fair admission apply uniformly."""
+        cl = getattr(self._tls, "client", None)
+        if cl is None or cl.session is not self:
+            cl = self.client(threading.current_thread().name)
+            self._tls.client = cl
+        return cl
+
+    def _resolve_client(self, client) -> SessionClient:
+        if client is None:
+            return self._thread_client()
+        if isinstance(client, SessionClient):
+            if client.session is not self:
+                raise ValueError("SessionClient belongs to another session")
+            return client
+        return self.client(str(client))
 
     # -- allocation ----------------------------------------------------------
-    def malloc(self, shape, dtype=np.uint8) -> BufferFuture:
+    def malloc(self, shape, dtype=np.uint8, *,
+               client: Union[None, str, SessionClient] = None) -> BufferFuture:
         """``hete_Malloc`` returning a :class:`BufferFuture` (version 0:
         the fresh host bytes are immediately valid — ``.data`` is
-        writable for input filling)."""
+        writable for input filling).  The allocation is charged to
+        ``client`` (default: the calling thread's implicit client) for
+        per-tenant arena quotas."""
         self._check_open()
-        return BufferFuture(self, self.context.malloc(shape, dtype))
+        owner = self._resolve_client(client).name
+        return BufferFuture(self, self.context.malloc(shape, dtype,
+                                                      owner=owner))
 
     def wrap(self, hd: HeteData) -> BufferFuture:
         """Adopt an existing ``hete_Data`` buffer into the session (for
@@ -332,6 +457,8 @@ class Session:
         n_out: int = 1,
         pin: Optional[str] = None,
         name: str = "",
+        client: Union[None, str, SessionClient] = None,
+        nowait: bool = False,
         **params: Any,
     ) -> Union[BufferFuture, Tuple[BufferFuture, ...]]:
         """Submit one op invocation to the stream; returns the output
@@ -345,39 +472,68 @@ class Session:
         a PE for CPU-ACC style placement studies; ``params`` are
         forwarded to the kernel.
 
+        Backpressure (ISSUE 5): the submission runs under ``client``'s
+        QoS (default: the calling thread's implicit client).  When the
+        client's in-flight window — or the stream's global window — is
+        full, the call *blocks* until a completion frees a slot, with
+        freed slots granted across waiting clients by weighted deficit
+        round-robin; ``nowait=True`` raises
+        :class:`~repro.core.qos.BackpressureFull` instead.
+
         Never blocks on data: dependencies are resolved from the
         buffers' read/write intervals and the task runs when its
         producers complete.  Scheduling and kernel failures surface
         through the returned futures, not here."""
         self._check_open()
-        ins_hd = [self._coerce(x) for x in inputs]
+        cl = self._resolve_client(client)
+        ins_hd = [self._coerce(x, owner=cl.name) for x in inputs]
         outs_hd, single = self._normalize_outs(
-            ins_hd, out, out_shape, out_dtype, n_out)
-        with self._sublock:
-            task = Task(
-                op_name, ins_hd, outs_hd, params=dict(params), pin=pin,
-                name=name or f"{op_name}#{next(self._seq)}",
-            )
-            node = self._builder.add(task)
-            i = node.index
-            self._events[i] = threading.Event()
-            roots: List[HeteData] = []
-            seen: set = set()
-            for hd in ins_hd + outs_hd:
-                r = hd.root
-                if id(r) not in seen:
-                    seen.add(id(r))
-                    roots.append(r)
-                    self.context.retain_use(r)
-            self._uses[i] = roots
-            futures = tuple(
-                BufferFuture(self, hd, version=self._builder.version_of(hd))
-                for hd in outs_hd
-            )
-            self._stream.admit(node)
+            ins_hd, out, out_shape, out_dtype, n_out, owner=cl.name)
+        task = Task(
+            op_name, ins_hd, outs_hd, params=dict(params), pin=pin,
+            name=name or f"{op_name}#{next(self._seq)}", client=cl.name,
+        )
+        stall = self.qos.admit(cl.state, admission_cost(task), nowait=nowait)
+        if stall > 0.0:
+            self.ledger.record_client_stall(cl.name, stall)
+        stream_owns_slot = False
+        try:
+            with self._sublock:
+                # Re-check under the lock: close() marks the stream
+                # closed under this same lock, so a submission that
+                # slipped past _check_open cannot enqueue onto a drained
+                # stream or a dead worker pool.
+                if self.closed or self._stream.closed:
+                    raise SessionClosedError("session is closed")
+                node = self._builder.add(task)
+                i = node.index
+                self._events[i] = threading.Event()
+                roots: List[HeteData] = []
+                seen: set = set()
+                for hd in ins_hd + outs_hd:
+                    r = hd.root
+                    if id(r) not in seen:
+                        seen.add(id(r))
+                        roots.append(r)
+                        self.context.retain_use(r)
+                self._uses[i] = roots
+                self._node_client[i] = cl.state
+                futures = tuple(
+                    BufferFuture(self, hd,
+                                 version=self._builder.version_of(hd), node=i)
+                    for hd in outs_hd
+                )
+                # From here the completion callback owns the QoS slot
+                # (it releases at task completion or failure).
+                stream_owns_slot = True
+                self._stream.admit(node)
+        except BaseException:
+            if not stream_owns_slot:
+                self.qos.release(cl.state)
+            raise
         return futures[0] if single else futures
 
-    def _coerce(self, x) -> HeteData:
+    def _coerce(self, x, owner: Optional[str] = None) -> HeteData:
         if isinstance(x, BufferFuture):
             if x.session is not self:
                 raise ValueError("BufferFuture belongs to another session")
@@ -385,12 +541,13 @@ class Session:
         if isinstance(x, HeteData):
             return x
         arr = np.asarray(x)
-        hd = self.context.malloc(arr.shape, arr.dtype)
+        hd = self.context.malloc(arr.shape, arr.dtype, owner=owner)
         hd.copies[HOST][...] = arr
         return hd
 
     def _normalize_outs(
-        self, ins_hd, out, out_shape, out_dtype, n_out
+        self, ins_hd, out, out_shape, out_dtype, n_out,
+        owner: Optional[str] = None,
     ) -> Tuple[List[HeteData], bool]:
         if out is not None:
             outs = [out] if isinstance(out, (BufferFuture, HeteData)) else list(out)
@@ -407,7 +564,8 @@ class Session:
             if out_dtype is None:
                 out_dtype = ins_hd[0].dtype
         return (
-            [self.context.malloc(out_shape, out_dtype) for _ in range(n_out)],
+            [self.context.malloc(out_shape, out_dtype, owner=owner)
+             for _ in range(n_out)],
             n_out == 1,
         )
 
@@ -421,6 +579,12 @@ class Session:
             self._node_exc[index] = exc
         for r in self._uses.pop(index, ()):
             self.context.release_use(r)
+        state = self._node_client.pop(index, None)
+        if state is not None:
+            # Free the client's QoS window slot — this is what unblocks
+            # a submitter waiting in backpressure (or admits the next
+            # DRR grantee).
+            self.qos.release(state)
         ev = self._events.get(index)
         if ev is not None:
             ev.set()
@@ -467,7 +631,7 @@ class Session:
 
     def _check_open(self) -> None:
         if self.closed:
-            raise RuntimeError("session is closed")
+            raise SessionClosedError("session is closed")
 
     # -- evidence ------------------------------------------------------------
     @property
@@ -482,3 +646,33 @@ class Session:
         point (after :meth:`barrier`) for exact, machine-independent
         modeled metrics."""
         return self._stream.report()
+
+    def fairness_report(self, clients: Optional[list] = None) -> Dict[str, Any]:
+        """Per-client service/stall/eviction evidence + Jain's index
+        over weight-normalized modeled service (see
+        :meth:`~repro.core.instrument.TransferLedger.fairness_report`),
+        using this session's configured client weights."""
+        return self.ledger.fairness_report(weights=self.qos.weights(),
+                                           clients=clients)
+
+    def qos_report(self) -> Dict[str, Any]:
+        """Deterministic multi-tenant schedule evidence (ISSUE 5).
+
+        Re-simulates the completed stream through
+        :func:`~repro.core.qos.fair_replay`: admission itself (windows +
+        weighted DRR) is re-enacted in virtual time, so per-task
+        ``release``/``finish`` times — and any latency derived from them
+        — depend only on each client's own submission order, never on
+        wall-clock thread interleaving.  Key per-task times by
+        :attr:`BufferFuture.node`.  Call at a sync point (after
+        :meth:`barrier`)."""
+        timeline, makespan, finish, release = self._stream.replay(
+            admission=self.qos)
+        return {
+            "makespan_model": makespan,
+            "timeline": timeline,
+            "finish_model": finish,
+            "release_model": release,
+            "qos": self.qos.params(),
+            "fairness": self.fairness_report(),
+        }

@@ -119,6 +119,7 @@ class WorkerPool:
 
     def __init__(self, pes: Sequence["PE"]) -> None:
         self.pe_names = tuple(pe.name for pe in pes)
+        self.closed = False
         self.queues: Dict[str, "queue.Queue"] = {
             pe.name: queue.Queue() for pe in pes
         }
@@ -169,6 +170,7 @@ class WorkerPool:
         return out
 
     def shutdown(self) -> None:
+        self.closed = True
         for q in self.queues.values():
             q.put(_SHUTDOWN)
         # Join so no daemon thread is left inside a JAX/XLA call at
@@ -319,6 +321,11 @@ class _ExecutorBase:
         self._topo = getattr(
             rt.context.ledger.bandwidth_model, "topology", None
         )
+        # cross-client interference (ISSUE 5): ready-but-unplaced tasks of
+        # the current dispatch batch, index -> (client, eligible PE names).
+        # The streaming engine fills it so heft placement can charge a
+        # candidate the delay it imposes on *other* clients' ready tasks.
+        self._copending: Dict[int, Tuple[Optional[str], frozenset]] = {}
 
     # -- placement ----------------------------------------------------------
     def _staging_delay(self, task: "Task", pe: "PE", at: float) -> float:
@@ -340,6 +347,29 @@ class _ExecutorBase:
             (self._model_finish.get(d, 0.0) for d in node.deps), default=0.0
         )
 
+    def _interference(self, task: "Task", pe: "PE", est: float) -> float:
+        """Modeled delay placing ``task`` on ``pe`` imposes on *other
+        clients'* ready-but-unplaced tasks (ISSUE 5): occupying ``pe``
+        for ``est`` seconds delays each co-pending task that could use
+        this PE, prorated by 1/|its eligible PEs| (the chance it needs
+        exactly this one).  Zero without client attribution — the batch
+        engine and single-tenant streams place exactly as before."""
+        if not self._copending or task.client is None:
+            return 0.0
+        pen = 0.0
+        for client, names in self._copending.values():
+            if client is not None and client != task.client and pe.name in names:
+                pen += est / len(names)
+        return pen
+
+    def _eligible_names(self, task: "Task") -> frozenset:
+        if task.pin is not None:
+            return frozenset((task.pin,))
+        try:
+            return frozenset(pe.name for pe in self.rt._eligible(task))
+        except LookupError:
+            return frozenset()
+
     def _pick_pe(self, node: TaskNode) -> "PE":
         """Dynamic placement for a ready node (deps complete ⇒ input flags
         are final). Called under the run's state lock."""
@@ -351,15 +381,18 @@ class _ExecutorBase:
             return rt._affinity_pick(task, pes)
         # heft: earliest-estimated-finish-time placement, on the same
         # cost basis as serial heft dispatch (Runtime._heft_costs) plus
-        # input-readiness, link-contention, and an insertion-based slot
-        # search over each PE's modeled busy intervals (ISSUE 3).
+        # input-readiness, link-contention, an insertion-based slot
+        # search over each PE's modeled busy intervals (ISSUE 3), and a
+        # cross-client interference charge (ISSUE 5) — the comparison key
+        # adds the delay this placement imposes on other clients' ready
+        # tasks, while the committed slot stays the physical [start, est).
         ready_m = self._ready_m(node)
 
         def placement(pe: "PE") -> Tuple[float, float, float]:
             tr, est = rt._heft_costs(task, pe)
             earliest = ready_m + tr + self._staging_delay(task, pe, ready_m)
             start = insert_slot(self._pe_slots[pe.name], earliest, est)
-            return start + est, start, est
+            return start + est + self._interference(task, pe, est), start, est
 
         efts = {pe.name: placement(pe) for pe in pes}
         best = min(pes, key=lambda pe: (efts[pe.name][0], pe.name))
@@ -812,10 +845,21 @@ class StreamExecutor(_ExecutorBase):
         if self.scheduler == "heft" and len(indices) > 1:
             self._rank_window()
             indices = sorted(indices, key=lambda i: -nodes[i].rank)
+        if self.scheduler == "heft":
+            # Cross-client interference (ISSUE 5): expose the batch's
+            # still-unplaced tasks (with client attribution) so each
+            # placement can charge the delay it imposes on other
+            # clients' ready work.
+            self._copending = {
+                i: (nodes[i].task.client,
+                    self._eligible_names(nodes[i].task))
+                for i in indices if nodes[i].task.client is not None
+            }
         assigned: List[Tuple[int, "PE"]] = []
         cap = 4 * max(self.window, 16)
         for i in indices:
             node = nodes[i]
+            self._copending.pop(i, None)  # never charge a task for itself
             try:
                 pe = self._static_pe.pop(i, None) or self._pick_pe(node)
             except BaseException as e:
@@ -833,6 +877,7 @@ class StreamExecutor(_ExecutorBase):
             for hd in node.task.inputs:
                 ctx.protect(hd, pe.location)
             assigned.append((i, pe))
+        self._copending = {}
         futs: Dict[int, Future] = {}
         if self.prefetch:
             for i, pe in self._prefetch_order(assigned):
@@ -898,10 +943,12 @@ class StreamExecutor(_ExecutorBase):
         self._failed[i] = exc
         if root:
             self._unobserved.append(i)
+        ledger = self.rt.context.ledger
         work = [i]
         while work:
             j = work.pop()
             self._remaining.pop(j, None)
+            ledger.record_client_failure(self._nodes[j].task.client)
             if self._on_done is not None:
                 self._on_done(j, exc)
             for s in sorted(self._nodes[j].dependents):
@@ -938,6 +985,13 @@ class StreamExecutor(_ExecutorBase):
             self._records[node.index] = (
                 pe.name, tuple(moves), comp_m, spill_s, out_s, tr_s,
                 comp_s, w0 - self._t0, w1 - self._t0,
+            )
+            # Per-tenant service accounting (ISSUE 5): the modeled
+            # seconds this task consumed, on the same basis as the
+            # makespan simulation — fairness_report sums these.
+            rt.context.ledger.record_client_task(
+                node.task.client, node.task.in_bytes,
+                tr_s + spill_s + comp_m + out_s,
             )
             self._completed.add(node.index)
             self._remaining.pop(node.index, None)
@@ -1022,11 +1076,24 @@ class StreamExecutor(_ExecutorBase):
         for payload in self._pool.drain(self):
             self._abandon(payload)
 
+    @property
+    def closed(self) -> bool:
+        """The stream no longer accepts admissions — explicitly closed,
+        or its worker pool was shut down (a task enqueued onto a dead
+        pool would hang forever; the session raises
+        ``SessionClosedError`` instead)."""
+        return self._closed or self._pool.closed
+
     # -- reporting ----------------------------------------------------------
-    def replay(self) -> Tuple[Timeline, float]:
-        """Deterministic re-simulation of everything completed so far
-        (see :func:`replay_schedule`) — call at a sync point for exact,
-        machine-independent modeled metrics."""
+    def replay(self, admission=None):
+        """Deterministic re-simulation of everything completed so far —
+        call at a sync point for exact, machine-independent modeled
+        metrics.  Without ``admission`` this is :func:`replay_schedule`
+        (returns ``(timeline, makespan)``); with a
+        :class:`~repro.core.qos.QoSManager` (or its ``params()`` dict)
+        it is the QoS-aware :func:`~repro.core.qos.fair_replay`, which
+        re-enacts per-client windows and DRR admission in virtual time
+        and returns ``(timeline, makespan, finish, release)``."""
         with self._cv:
             records = dict(self._records)
             # Snapshot node linkage: later admissions keep mutating the
@@ -1035,7 +1102,11 @@ class StreamExecutor(_ExecutorBase):
                 TaskNode(n.index, n.task, set(n.deps), set(n.dependents))
                 for n in self._nodes
             ]
-        return replay_schedule(self.rt, snap, records, self._topo)
+        if admission is None:
+            return replay_schedule(self.rt, snap, records, self._topo)
+        from .qos import fair_replay  # local import: hete imports qos
+
+        return fair_replay(self.rt, snap, records, self._topo, admission)
 
     def report(self) -> Dict[str, Any]:
         """Schedule evidence for the stream so far.  ``makespan_model``

@@ -48,6 +48,17 @@ submitted-but-incomplete tasks per root allocation, and
 use — the session frees buffers the moment the stream no longer touches
 them, without the application ever synchronizing.
 
+Per-tenant arena quotas (ISSUE 5): a buffer may carry an ``owner`` (the
+session client that allocated it), and :meth:`HeteContext.set_quota`
+bounds each tenant's total reserved bytes *per device arena*.  A
+reservation that would push its owner over budget first evicts the
+owner's own least-valuable resident bytes; when nothing of the tenant's
+is evictable the failure is :class:`~repro.core.qos.QuotaExceeded` — an
+``AllocError`` scoped to that tenant, leaving the arena (and every other
+tenant) untouched.  Because pinned buffers hold arena extents, the quota
+is also a pin budget: one tenant can never pin a whole arena.  General
+capacity eviction prefers victims whose owner is over quota.
+
 Interconnect topology (ISSUE 3): when the ledger's bandwidth model is a
 :class:`~repro.core.topology.TopologyBandwidthModel`, every copy
 ``stage`` performs is priced and recorded along its *route* — one ledger
@@ -71,8 +82,8 @@ import numpy as np
 
 from .allocator import AllocError, Extent, make_allocator
 from .instrument import TransferLedger
-from .instrument import ledger as _global_ledger
 from .locations import HOST, Location
+from .qos import QuotaExceeded
 
 __all__ = [
     "HeteData",
@@ -163,6 +174,9 @@ class HeteData:
     # whether a deferred hete_free fires when that count drains
     pending_uses: int = 0
     free_pending: bool = False
+    # owning tenant (ISSUE 5): the session client that allocated this
+    # buffer — quota accounting and eviction preference key on it
+    owner: Optional[str] = None
     # set when a fragment was written since the parent's copy was last
     # coherent — a whole-parent read gathers fragments first (see
     # HeteContext._gather_fragments)
@@ -308,6 +322,10 @@ class HeteContext:
         # (id(root), loc) -> refcount of queued graph tasks reading those
         # bytes; prefetch staging must not evict them (executor-managed)
         self._protected: Dict[Tuple[int, Location], int] = {}
+        # -- per-tenant quotas (ISSUE 5) --
+        self._quotas: Dict[str, int] = {}  # owner -> bytes per device arena
+        # (owner, loc) -> bytes that owner currently reserves in loc's arena
+        self._tenant_bytes: Dict[Tuple[str, Location], int] = {}
         self._tls = threading.local()  # .strict, .spill_s
 
     # -- registry ----------------------------------------------------------
@@ -331,6 +349,47 @@ class HeteContext:
                 root.pins.pop(loc)
             else:
                 root.pins[loc] = n - 1
+
+    # -- per-tenant quotas (ISSUE 5) -----------------------------------------
+    def set_quota(self, owner: str, nbytes: Optional[int]) -> None:
+        """Bound ``owner``'s reserved bytes in *each* device arena to
+        ``nbytes`` (None lifts the bound).  Applies to future
+        reservations; bytes already resident are not evicted eagerly, but
+        an over-quota tenant becomes the preferred eviction victim."""
+        with self._arena_lock:
+            if nbytes is None:
+                self._quotas.pop(owner, None)
+            else:
+                self._quotas[owner] = int(nbytes)
+
+    def quota_of(self, owner: str) -> Optional[int]:
+        with self._arena_lock:
+            return self._quotas.get(owner)
+
+    def tenant_bytes(self, owner: str, loc: Location) -> int:
+        """Bytes ``owner`` currently reserves in ``loc``'s arena."""
+        with self._arena_lock:
+            return self._tenant_bytes.get((owner, loc), 0)
+
+    def _tenant_charge(self, root: HeteData, loc: Location,
+                       sign: int) -> None:
+        """Track per-tenant reserved bytes at extent create (+1) /
+        release (-1).  Called under the arena lock."""
+        if root.owner is None:
+            return
+        key = (root.owner, loc)
+        n = self._tenant_bytes.get(key, 0) + sign * root.nbytes
+        if n <= 0:
+            self._tenant_bytes.pop(key, None)
+        else:
+            self._tenant_bytes[key] = n
+
+    def _over_quota(self, owner: Optional[str], loc: Location) -> bool:
+        if owner is None:
+            return False
+        q = self._quotas.get(owner)
+        return (q is not None
+                and self._tenant_bytes.get((owner, loc), 0) > q)
 
     # -- buffer↔future lifecycle (ISSUE 4) -----------------------------------
     def retain_use(self, hd: HeteData) -> None:
@@ -458,17 +517,20 @@ class HeteContext:
         dtype: Any = np.uint8,
         *,
         spaces: Sequence[Location] = (),
+        owner: Optional[str] = None,
     ) -> HeteData:
         """``hete_Malloc``: host buffer + arena reservations in ``spaces``.
 
         The user only names a size; which resource memories get extents is
         decided by the runtime (here: the ``spaces`` the embedding runtime
-        passes — app code never does).
+        passes — app code never does).  ``owner`` names the tenant the
+        allocation is charged to (per-tenant quotas, ISSUE 5).
         """
         if isinstance(shape, (int, np.integer)):
             shape = (int(shape),)
         shape = tuple(int(s) for s in shape)
-        hd = HeteData(shape=shape, dtype=np.dtype(dtype), context=self)
+        hd = HeteData(shape=shape, dtype=np.dtype(dtype), context=self,
+                      owner=owner)
         hd.copies[HOST] = np.zeros(shape, dtype=dtype)
         hd.valid_at = {HOST}
         for loc in spaces:
@@ -491,6 +553,7 @@ class HeteContext:
                 space = self.spaces[loc]
                 if space.arena is not None:
                     space.arena.free(ext)
+                    self._tenant_charge(hd, loc, -1)
                 space.residents.pop(id(hd), None)
             hd.extents.clear()
             hd.pins.clear()
@@ -513,7 +576,13 @@ class HeteContext:
         failed allocation evicts one victim (cost-aware LRU) and retries;
         ``AllocError`` surfaces only when nothing is evictable — i.e. the
         pinned (or, inside :meth:`prefetch_guard`, pinned+protected)
-        working set genuinely exceeds capacity."""
+        working set genuinely exceeds capacity.
+
+        Per-tenant quotas (ISSUE 5): a reservation that would push the
+        owner over its arena budget first evicts the owner's *own*
+        resident buffers; with nothing of the tenant's evictable it
+        raises :class:`~repro.core.qos.QuotaExceeded` — scoped to the
+        tenant, other tenants keep allocating."""
         root = hd.root
         space = self.spaces[loc]
         if space.arena is None:
@@ -523,7 +592,36 @@ class HeteContext:
                 return
             stalled = False
             skip: set = set()  # victims whose eviction failed (in use)
+            owner = root.owner
+            quota = self._quotas.get(owner) if owner is not None else None
             while True:
+                if (quota is not None
+                        and self._tenant_bytes.get((owner, loc), 0)
+                        + root.nbytes > quota):
+                    victim = self._select_victim(space, loc, exclude=root,
+                                                 skip=skip, tenant=owner)
+                    if victim is None:
+                        if getattr(self._tls, "strict", False):
+                            self.ledger.record_prefetch_deferral()
+                            raise PrefetchDeferred(
+                                f"prefetch to {loc} deferred: tenant "
+                                f"{owner!r} is at quota with no evictable "
+                                f"bytes of its own"
+                            )
+                        raise QuotaExceeded(
+                            f"tenant {owner!r} quota exhausted at {loc}: "
+                            f"{self._tenant_bytes.get((owner, loc), 0)} B "
+                            f"reserved of {quota} B budget, cannot add "
+                            f"{root.nbytes} B (shape={root.shape}); other "
+                            f"tenants are unaffected",
+                            tenant=owner, location=loc,
+                        )
+                    if not stalled:
+                        stalled = True
+                        self.ledger.record_spill_stall()
+                    if not self._evict_locked(victim, loc):
+                        skip.add(id(victim))  # in active use; try others
+                    continue
                 try:
                     ext = space.arena.alloc(root.nbytes, tag=id(root))
                 except AllocError as e:
@@ -556,29 +654,38 @@ class HeteContext:
                     continue
                 root.extents[loc] = ext
                 space.residents[id(root)] = root
+                self._tenant_charge(root, loc, +1)
                 self._touch(root, loc)
                 return
 
     # -- eviction engine (ISSUE 2) -------------------------------------------
     def _select_victim(self, space: MemorySpace, loc: Location,
                        exclude: HeteData,
-                       skip: frozenset = frozenset()) -> Optional[HeteData]:
+                       skip: frozenset = frozenset(),
+                       tenant: Optional[str] = None) -> Optional[HeteData]:
         """Cost-aware LRU victim pick, called under the arena lock.
 
         Candidates: resident roots that are not the buffer being
         reserved, not pinned, and — inside :meth:`prefetch_guard` — not
         protected by a queued reader.  A candidate whose lock is held by
         another thread is in active use and skipped (non-blocking probe,
-        which also makes eviction deadlock-free).  Order: least recent
-        access first; ties broken by the modeled cost of the round trip
+        which also makes eviction deadlock-free).  Order: buffers whose
+        owner is over its tenant quota first (ISSUE 5), then least
+        recent access; ties broken by the modeled cost of the round trip
         the eviction causes (write-back now if dirty + re-fetch later),
         normalized per byte freed, then by id for determinism.
+
+        ``tenant`` restricts candidates to that owner's buffers — the
+        quota-enforcement path evicts only the over-budget tenant's own
+        bytes, never another tenant's.
         """
         strict = getattr(self._tls, "strict", False)
         bw = self.ledger.bandwidth_model
         best, best_key = None, None
         for rid, cand in space.residents.items():
             if cand is exclude.root or rid in skip or cand.pins.get(loc, 0) > 0:
+                continue
+            if tenant is not None and cand.owner != tenant:
                 continue
             if strict and self._protected.get((rid, loc), 0) > 0:
                 continue
@@ -590,7 +697,8 @@ class HeteContext:
                 # room) — rank victims by the cost eviction really pays.
                 _, wb_s = self._writeback_target(cand, loc, dirty)
                 cost_s += wb_s
-            key = (cand.last_touch.get(loc, 0), cost_s / max(cand.nbytes, 1),
+            key = (0 if self._over_quota(cand.owner, loc) else 1,
+                   cand.last_touch.get(loc, 0), cost_s / max(cand.nbytes, 1),
                    rid)
             if best_key is None or key < best_key:
                 best, best_key = cand, key
@@ -614,12 +722,21 @@ class HeteContext:
             return best, best_s
         from .topology import TopologyError
 
+        quota = (self._quotas.get(root.owner)
+                 if root.owner is not None else None)
         for ploc, pspace in self.spaces.items():
             if ploc == loc or ploc == HOST or pspace.arena is None:
                 continue
-            if (ploc not in root.extents
-                    and pspace.arena.largest_free() < root.nbytes):
-                continue
+            if ploc not in root.extents:
+                if pspace.arena.largest_free() < root.nbytes:
+                    continue
+                # Never let the runtime's own eviction path push the
+                # owner over its budget in the peer arena (ISSUE 5):
+                # spilling there would reserve a fresh extent.
+                if (quota is not None
+                        and self._tenant_bytes.get((root.owner, ploc), 0)
+                        + root.nbytes > quota):
+                    continue
             try:
                 s = bw.seconds(loc, ploc, dirty)
             except TopologyError:  # unreachable in this topology
@@ -652,6 +769,7 @@ class HeteContext:
                 return None
             root.extents[peer] = ext
             pspace.residents[id(root)] = root
+            self._tenant_charge(root, peer, +1)
         wb_s = 0.0
         if root.last_location == loc:
             # The parent's loc copy is current for every loc-flagged
@@ -763,9 +881,10 @@ class HeteContext:
             space.arena.free(ext)
             del root.extents[loc]
             space.residents.pop(id(root), None)
+            self._tenant_charge(root, loc, -1)
             root.eviction_epoch += 1
             self.ledger.record_eviction(loc, root.nbytes, dirty, wb_s,
-                                        target=target)
+                                        target=target, owner=root.owner)
             return True
         finally:
             for h in held:

@@ -23,7 +23,22 @@ from typing import Iterator, List, Optional
 from .locations import DEFAULT_BANDWIDTH_MODEL, BandwidthModel, Location
 
 __all__ = ["TransferLedger", "ledger", "Timer", "Timeline", "TimelineEvent",
-           "TransferEvent"]
+           "TransferEvent", "jain_index"]
+
+
+def jain_index(values) -> float:
+    """Jain's fairness index over a sequence of non-negative allocations:
+    ``(Σx)² / (n·Σx²)`` — 1.0 means perfectly equal, 1/n means one
+    participant got everything.  Empty or all-zero input is vacuously
+    fair (1.0)."""
+    vals = [float(v) for v in values]
+    if not vals:
+        return 1.0
+    sq = sum(v * v for v in vals)
+    if sq == 0.0:
+        return 1.0
+    total = sum(vals)
+    return (total * total) / (len(vals) * sq)
 
 
 @dataclasses.dataclass
@@ -58,6 +73,13 @@ class TransferLedger:
     # -- spill-to-peer counters (ISSUE 3) --
     spills_to_peer: int = 0  # evictions whose write-back went to a peer arena
     peer_writeback_bytes: int = 0  # dirty bytes spilled device→device
+    # -- per-client (multi-tenant) counters (ISSUE 5) --
+    client_tasks: Counter = dataclasses.field(default_factory=Counter)
+    client_bytes: Counter = dataclasses.field(default_factory=Counter)
+    client_service_s: Counter = dataclasses.field(default_factory=Counter)
+    client_stall_s: Counter = dataclasses.field(default_factory=Counter)
+    client_evictions: Counter = dataclasses.field(default_factory=Counter)
+    client_failures: Counter = dataclasses.field(default_factory=Counter)
     _lock: threading.RLock = dataclasses.field(
         default_factory=threading.RLock, repr=False, compare=False
     )
@@ -78,12 +100,15 @@ class TransferLedger:
 
     def record_eviction(self, loc: Location, nbytes: int,
                         writeback_bytes: int, stall_s: float,
-                        target: Optional[Location] = None) -> None:
+                        target: Optional[Location] = None,
+                        owner: Optional[str] = None) -> None:
         with self._lock:
             self.evictions[str(loc)] += 1
             self.evicted_bytes += nbytes
             self.writeback_bytes += writeback_bytes
             self.spill_stall_s += stall_s
+            if owner is not None:
+                self.client_evictions[owner] += 1
             if (target is not None and target.kind != "host"
                     and writeback_bytes > 0):
                 self.spills_to_peer += 1
@@ -96,6 +121,78 @@ class TransferLedger:
     def record_prefetch_deferral(self, n: int = 1) -> None:
         with self._lock:
             self.prefetch_deferrals += n
+
+    # -- per-client (multi-tenant) accounting (ISSUE 5) ---------------------
+    def record_client_task(self, client: Optional[str], nbytes: int,
+                           service_s: float) -> None:
+        """One completed task attributed to ``client``: its input bytes
+        and the modeled service it consumed (staging + spill stall +
+        compute estimate + output transfer) — the quantity
+        :meth:`fairness_report` computes Jain's index over."""
+        if client is None:
+            return
+        with self._lock:
+            self.client_tasks[client] += 1
+            self.client_bytes[client] += nbytes
+            self.client_service_s[client] += service_s
+
+    def record_client_stall(self, client: Optional[str],
+                            seconds: float) -> None:
+        """Seconds a client's submitter spent blocked in QoS admission
+        (backpressure window or DRR queue)."""
+        if client is None:
+            return
+        with self._lock:
+            self.client_stall_s[client] += seconds
+
+    def record_client_failure(self, client: Optional[str]) -> None:
+        if client is None:
+            return
+        with self._lock:
+            self.client_failures[client] += 1
+
+    def client_names(self) -> list:
+        with self._lock:
+            names = (set(self.client_tasks) | set(self.client_bytes)
+                     | set(self.client_service_s) | set(self.client_stall_s)
+                     | set(self.client_evictions) | set(self.client_failures))
+        return sorted(names)
+
+    def fairness_report(self, weights: Optional[dict] = None,
+                        clients: Optional[list] = None) -> dict:
+        """Per-client QoS evidence + Jain's fairness index.
+
+        The index is computed over each selected client's
+        *weight-normalized modeled service* (``service_model_s /
+        weight``): with equal weights it measures how equally the runtime
+        served the clients; with configured weights, 1.0 means service
+        landed exactly in the weight ratios.  ``clients`` restricts the
+        index to a subset (e.g. the equal-demand light tenants in
+        ``bench_multitenant`` — comparing tenants with deliberately
+        unequal demands would conflate demand with unfairness);
+        ``weights`` default to 1.0 per client.
+        """
+        names = sorted(clients) if clients is not None else self.client_names()
+        w = {n: float((weights or {}).get(n, 1.0)) for n in names}
+        with self._lock:
+            per = {
+                n: {
+                    "tasks": self.client_tasks.get(n, 0),
+                    "bytes": self.client_bytes.get(n, 0),
+                    "service_model_s": self.client_service_s.get(n, 0.0),
+                    "stall_s": self.client_stall_s.get(n, 0.0),
+                    "evictions": self.client_evictions.get(n, 0),
+                    "failures": self.client_failures.get(n, 0),
+                    "weight": w[n],
+                }
+                for n in names
+            }
+        shares = [per[n]["service_model_s"] / w[n] for n in names]
+        return {
+            "clients": per,
+            "n_clients": len(names),
+            "jain_index": jain_index(shares),
+        }
 
     def record_flag_check(self, n: int = 1) -> None:
         # Deliberately lock-free: this sits on the §5.2.2 flag-check hot
@@ -145,6 +242,12 @@ class TransferLedger:
             self.prefetch_deferrals = 0
             self.spills_to_peer = 0
             self.peer_writeback_bytes = 0
+            self.client_tasks.clear()
+            self.client_bytes.clear()
+            self.client_service_s.clear()
+            self.client_stall_s.clear()
+            self.client_evictions.clear()
+            self.client_failures.clear()
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -166,6 +269,10 @@ class TransferLedger:
                 "prefetch_deferrals": self.prefetch_deferrals,
                 "spills_to_peer": self.spills_to_peer,
                 "peer_writeback_bytes": self.peer_writeback_bytes,
+                "client_tasks": dict(sorted(self.client_tasks.items())),
+                "client_service_s": dict(
+                    sorted(self.client_service_s.items())
+                ),
             }
 
 
@@ -174,9 +281,11 @@ ledger = TransferLedger()
 
 
 @contextlib.contextmanager
-def fresh_ledger(l: Optional[TransferLedger] = None) -> Iterator[TransferLedger]:
+def fresh_ledger(
+    led: Optional[TransferLedger] = None,
+) -> Iterator[TransferLedger]:
     """Context manager: reset (or swap in) a ledger for one experiment."""
-    target = l if l is not None else ledger
+    target = led if led is not None else ledger
     saved = target.snapshot()
     target.reset()
     try:
@@ -295,7 +404,7 @@ class Timeline:
             or 1.0
         )
         labels = sorted({e.pe for e in evs}) + sorted({x.link for x in xfers})
-        lw = max([10] + [len(l) for l in labels])
+        lw = max([10] + [len(label) for label in labels])
 
         def paint(line, start, end, mark):
             a = int(start / span * (width - 1))

@@ -18,7 +18,6 @@ location is managed by :mod:`repro.core.hete`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 __all__ = ["Location", "HOST", "BandwidthModel", "DEFAULT_BANDWIDTH_MODEL"]
 

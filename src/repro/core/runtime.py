@@ -85,6 +85,9 @@ class Task:
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     pin: Optional[str] = None  # pin to a PE name (CPU-ACC style scenarios)
     name: str = ""
+    # submitting session client (ISSUE 5): per-tenant accounting +
+    # cross-client interference-aware placement key on it
+    client: Optional[str] = None
 
     @property
     def in_bytes(self) -> int:

@@ -13,11 +13,11 @@ checkpoint stores only ``next_index``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 
-from repro.configs.base import ArchConfig, ShapeSpec
+from repro.configs.base import ArchConfig
 
 __all__ = ["TokenPipeline"]
 

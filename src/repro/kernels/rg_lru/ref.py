@@ -1,7 +1,6 @@
 """Oracle: RG-LRU linear recurrence via associative_scan."""
 
 import jax
-import jax.numpy as jnp
 
 
 def rg_lru_scan(a, b, h0):

@@ -20,9 +20,8 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import Counter, defaultdict
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-import numpy as np
 
 __all__ = ["collective_stats", "CollectiveReport"]
 

@@ -19,7 +19,6 @@ internal scans for roofline probes (DESIGN.md).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,8 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

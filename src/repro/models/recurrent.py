@@ -21,7 +21,6 @@ TPU adaptation notes (recorded in DESIGN.md):
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

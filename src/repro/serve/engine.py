@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,6 @@ from repro.configs.base import ArchConfig
 from repro.core.paged_kv import PagedKVPool, init_pool_arrays, write_token
 from repro.kernels.paged_attention import ref as pa_ref
 from repro.models import layers as L
-from repro.models.model_api import Model, build_model
 
 __all__ = ["ServeEngine", "Request"]
 

@@ -25,8 +25,7 @@ import dataclasses
 import signal
 import statistics
 import time
-from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np

@@ -2,9 +2,6 @@
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
-
 import jax
 import jax.numpy as jnp
 

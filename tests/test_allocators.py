@@ -17,11 +17,7 @@ except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
 from repro.core.allocator import (
-    AllocError,
-    BitsetAllocator,
-    Extent,
-    NextFitAllocator,
-    make_allocator,
+    AllocError, BitsetAllocator, NextFitAllocator, make_allocator,
 )
 
 

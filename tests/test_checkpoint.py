@@ -1,13 +1,8 @@
 """Checkpoint format: atomicity, retention, roundtrip, elastic restore."""
 
-import json
-import shutil
-from pathlib import Path
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 

@@ -17,7 +17,7 @@ try:
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compression import (
     compress_grads,
     decompress_grads,

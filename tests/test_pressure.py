@@ -221,7 +221,6 @@ def test_allocator_tags_name_residents():
 
 
 def _pressure_runtime(arena_bytes, **kw):
-    from repro.apps.radar import make_runtime
     from repro.core.runtime import make_emulated_soc
     from repro.apps.radar import register_kernels
     from repro.core.runtime import Runtime

@@ -1,7 +1,6 @@
 """Runtime dispatch + memory policies: the paper's copy-count claims."""
 
 import numpy as np
-import pytest
 
 from repro.apps.radar import (
     build_2fft,
@@ -94,7 +93,6 @@ def test_data_affinity_tie_break_is_deterministic():
     """Satellite (ISSUE 1): equal byte scores resolve by stable PE-name
     ordering, so placement is reproducible across runs and PE list
     orderings."""
-    from repro.core.runtime import Runtime
     placements = []
     for trial in range(3):
         rt, ctx = make_runtime(policy="rimms", n_cpu=0,

@@ -5,12 +5,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.compat import make_mesh
 from repro.distributed.sharding import (
-    MULTI_POD_RULES,
-    SINGLE_POD_RULES,
-    AxisRules,
-    resolve_spec,
-    resolve_spec_tree,
-    use_rules,
+    MULTI_POD_RULES, SINGLE_POD_RULES, AxisRules, resolve_spec,
 )
 
 

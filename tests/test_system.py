@@ -5,7 +5,6 @@ workflow (pipeline → train → checkpoint → serve) glued together."""
 import dataclasses
 
 import numpy as np
-import pytest
 
 from repro.apps.radar import build_sar, make_runtime
 from repro.core.hete import hete_sync
@@ -30,7 +29,6 @@ def test_paper_end_to_end_sar():
 def test_framework_end_to_end_train_then_serve(tmp_path):
     """Train a tiny LM for a few steps (checkpointed), restore the params
     and serve a request with the paged engine — full lifecycle."""
-    import jax
 
     from repro.configs import get_config
     from repro.models import build_model

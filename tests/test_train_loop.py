@@ -1,10 +1,7 @@
 """Training-loop fault tolerance: checkpoint/restart determinism,
 preemption safety, straggler detection, pipeline resume."""
 
-import dataclasses
-
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data.pipeline import TokenPipeline
