@@ -129,12 +129,17 @@ def main() -> None:
                     help="small CI run with equivalence + speedup asserts")
     ap.add_argument("--json", default="BENCH_graph.json",
                     help="machine-readable smoke output path ('' to skip)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export + lint a Perfetto trace of the run")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    if args.smoke:
-        smoke(args.json or None)
-    else:
-        run()
+    from .common import tracing
+
+    with tracing(args.trace_dir, "graph"):
+        if args.smoke:
+            smoke(args.json or None)
+        else:
+            run()
 
 
 if __name__ == "__main__":

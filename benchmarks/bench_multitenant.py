@@ -143,6 +143,10 @@ def _tenant_case(*, n: int, light_chains: int, heavy_chains: int,
         "stall_s": {name: snap["client_tasks"].get(name, 0) and
                     fairness["clients"][name]["stall_s"]
                     for name in fairness["clients"]},
+        # per-client per-*task* modeled-latency percentiles from the
+        # session's histogram registry (ISSUE 6) — a different quantity
+        # from the per-*chain* p95 the interference gate uses
+        "latency_percentiles": qrep["latency_percentiles"],
         "_out": outs,
         "_lat": lats,
     }
@@ -224,6 +228,22 @@ def run_multitenant(*, n: int, light_chains: int, heavy_chains: int,
     }
 
     if smoke:
+        # Per-client histogram percentiles (ISSUE 6): every tenant must
+        # report ordered, positive per-task modeled latency quantiles,
+        # with one sample per task it completed.
+        pct = mix["latency_percentiles"]
+        expect = {f"light{c}" for c in range(N_LIGHTS)} | {"heavy"}
+        assert expect <= set(pct), (
+            f"missing per-client percentiles: {expect - set(pct)}"
+        )
+        for name in sorted(expect):
+            s = pct[name]
+            assert 0.0 < s["p50"] <= s["p95"] <= s["p99"], (name, s)
+        n_light_tasks = sum(pct[f"light{c}"]["count"]
+                            for c in range(N_LIGHTS))
+        assert n_light_tasks + pct["heavy"]["count"] == mix["n_tasks"], (
+            "histogram sample counts don't cover the task population"
+        )
         assert identical, "light chains differ between mix and solo runs"
         assert mix["n_completed"] == mix["n_tasks"], (
             f"heavy tenant starved: {mix['n_completed']}/{mix['n_tasks']}"
@@ -265,14 +285,19 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--light-chains", type=int, default=None)
     ap.add_argument("--heavy-chains", type=int, default=None)
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export + lint a Perfetto trace of the run")
     args = ap.parse_args()
     n = args.n or (1 << 12 if args.smoke else N)
     light_chains = args.light_chains or (4 if args.smoke else LIGHT_CHAINS)
     heavy_chains = args.heavy_chains or (24 if args.smoke else HEAVY_CHAINS)
     print("name,us_per_call,derived")
-    run_multitenant(n=n, light_chains=light_chains,
-                    heavy_chains=heavy_chains,
-                    json_path=args.json or None, smoke=args.smoke)
+    from .common import tracing
+
+    with tracing(args.trace_dir, "multitenant"):
+        run_multitenant(n=n, light_chains=light_chains,
+                        heavy_chains=heavy_chains,
+                        json_path=args.json or None, smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -1,37 +1,155 @@
-"""Paper §5.2.2: per-call last-resource-flag check overhead.
+"""Paper §5.2.2: per-call last-resource-flag check overhead — and the
+tracing subsystem's cost on and off that hot path (ISSUE 6).
 
 The paper measures 1.16 CPU cycles (1–2 cycles) per input on the
 ZCU102's 1.2 GHz cores.  Our check is a Python-level dict/flag compare;
-we report ns/call and the cycle-equivalent at 1.2 GHz, plus the check
-cost relative to the transfer it avoids."""
+we report ns/call and the cycle-equivalent at 1.2 GHz.
+
+Three tracer configurations are interleaved (round-robin repeats, so
+machine drift hits all three equally) over the same flag-hit loop:
+
+* ``baseline``  — no tracer attached (the pre-tracing hot path);
+* ``traced``    — a ``TraceCollector`` attached and enabled.  The
+  flag-hit fast path carries **zero** tracer instrumentation by design,
+  so this must match baseline;
+* ``paused``    — tracer attached but ``enabled=False`` (the no-op
+  guard every slow-path hook takes first).
+
+``--smoke`` gates both ratios at ≤ 1.30× baseline — i.e. the
+tracing-disabled hot path stays statistically indistinguishable from a
+build without tracing, which is the repo's analogue of the paper's
+1–2-cycles-per-call claim.  The raw event-record cost (``instant()``
+ns/event, enabled vs paused) is reported alongside.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_overhead [--smoke]
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 from .common import emit
 
+REPEATS = 5
+SMOKE_RATIO = 1.30
 
-def run(n_calls: int = 1_000_000) -> None:
-    from repro.core.hete import HeteContext
+
+def _flag_loop_ns(ctx, hd, n_calls: int) -> float:
+    """ns/call over n_calls flag-hit ensure() calls."""
     from repro.core.locations import HOST
 
-    ctx = HeteContext()
-    hd = ctx.malloc((1024,), np.float32)
     t0 = time.perf_counter()
     for _ in range(n_calls):
         ctx.ensure(hd, HOST)  # flag hit: no copy
-    dt = time.perf_counter() - t0
-    ns = dt / n_calls * 1e9
+    return (time.perf_counter() - t0) / n_calls * 1e9
+
+
+def _median(xs) -> float:
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def _bench_flag_check(n_calls: int) -> dict:
+    """Interleaved flag-check medians for the three tracer configs."""
+    from repro.core.hete import HeteContext
+    from repro.core.trace import TraceCollector
+
+    ctx = HeteContext()
+    hd = ctx.malloc((1024,), np.float32)
+    tc = TraceCollector()
+    samples = {"baseline": [], "traced": [], "paused": []}
+    _flag_loop_ns(ctx, hd, n_calls)  # warmup
+    for _ in range(REPEATS):
+        ctx.set_tracer(None)
+        samples["baseline"].append(_flag_loop_ns(ctx, hd, n_calls))
+        ctx.set_tracer(tc)
+        tc.resume()
+        samples["traced"].append(_flag_loop_ns(ctx, hd, n_calls))
+        tc.pause()
+        samples["paused"].append(_flag_loop_ns(ctx, hd, n_calls))
+    ctx.set_tracer(None)
+    out = {k: _median(v) for k, v in samples.items()}
+    out["flag_checks"] = ctx.ledger.flag_checks
+    return out
+
+
+def _bench_instant(n_events: int) -> dict:
+    """Raw event-record cost: instant() ns/event, enabled vs paused."""
+    from repro.core.trace import TraceCollector
+
+    enabled, paused = [], []
+    for _ in range(REPEATS):
+        tc = TraceCollector(capacity_per_thread=n_events + 1)  # no drops
+        t0 = time.perf_counter()
+        for _ in range(n_events):
+            tc.instant("e", "bench", "t")
+        enabled.append((time.perf_counter() - t0) / n_events * 1e9)
+        tc.pause()
+        t0 = time.perf_counter()
+        for _ in range(n_events):
+            tc.instant("e", "bench", "t")
+        paused.append((time.perf_counter() - t0) / n_events * 1e9)
+    return {"enabled": _median(enabled), "paused": _median(paused)}
+
+
+def run(n_calls: int = 1_000_000, *, smoke: bool = False) -> dict:
+    flag = _bench_flag_check(n_calls)
+    inst = _bench_instant(min(n_calls, 50_000))
+    ns = flag["baseline"]
     cycles_1p2ghz = ns * 1.2
+    ratio_traced = flag["traced"] / ns
+    ratio_paused = flag["paused"] / ns
     emit(
         "sec522_flag_check", ns / 1e3,
         f"ns_per_call={ns:.1f};cycles@1.2GHz={cycles_1p2ghz:.1f};"
-        f"checks={ctx.ledger.flag_checks}",
+        f"checks={flag['flag_checks']}",
     )
+    emit(
+        "trace_flag_check_traced", flag["traced"] / 1e3,
+        f"ns_per_call={flag['traced']:.1f};x_baseline={ratio_traced:.3f}",
+    )
+    emit(
+        "trace_flag_check_paused", flag["paused"] / 1e3,
+        f"ns_per_call={flag['paused']:.1f};x_baseline={ratio_paused:.3f}",
+    )
+    emit(
+        "trace_instant_enabled", inst["enabled"] / 1e3,
+        f"ns_per_event={inst['enabled']:.1f}",
+    )
+    emit(
+        "trace_instant_paused", inst["paused"] / 1e3,
+        f"ns_per_event={inst['paused']:.1f}",
+    )
+    if smoke:
+        assert ratio_traced <= SMOKE_RATIO, (
+            f"tracing-enabled flag check {ratio_traced:.2f}x baseline "
+            f"(gate: <={SMOKE_RATIO}x — the flag-hit fast path must carry "
+            f"no tracer instrumentation)"
+        )
+        assert ratio_paused <= SMOKE_RATIO, (
+            f"tracing-paused flag check {ratio_paused:.2f}x baseline "
+            f"(gate: <={SMOKE_RATIO}x)"
+        )
+        print(f"overhead smoke: OK (traced {ratio_traced:.2f}x, paused "
+              f"{ratio_paused:.2f}x baseline of {ns:.0f} ns/call)",
+              flush=True)
+    return {"flag": flag, "instant": inst,
+            "ratio_traced": ratio_traced, "ratio_paused": ratio_paused}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run gating tracer overhead ratios")
+    ap.add_argument("--n-calls", type=int, default=None)
+    args = ap.parse_args()
+    n_calls = args.n_calls or (100_000 if args.smoke else 1_000_000)
+    print("name,us_per_call,derived")
+    run(n_calls, smoke=args.smoke)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -141,12 +141,17 @@ def main() -> None:
                     help="machine-readable output path ('' to skip)")
     ap.add_argument("--ways", type=int, default=None)
     ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export + lint a Perfetto trace of the run")
     args = ap.parse_args()
     ways = args.ways or (4 if args.smoke else WAYS)
     n = args.n or (1 << 12 if args.smoke else N)
     print("name,us_per_call,derived")
-    run_pressure(ways=ways, n=n, json_path=args.json or None,
-                 smoke=args.smoke)
+    from .common import tracing
+
+    with tracing(args.trace_dir, "pressure"):
+        run_pressure(ways=ways, n=n, json_path=args.json or None,
+                     smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -231,13 +231,18 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=None)
     ap.add_argument("--chains", type=int, default=None)
     ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export + lint a Perfetto trace of the run")
     args = ap.parse_args()
     clients = args.clients or (4 if args.smoke else CLIENTS)
     chains = args.chains or (6 if args.smoke else CHAINS)
     n = args.n or (1 << 13 if args.smoke else N)
     print("name,us_per_call,derived")
-    run_stream(clients=clients, chains=chains, n=n,
-               json_path=args.json or None, smoke=args.smoke)
+    from .common import tracing
+
+    with tracing(args.trace_dir, "stream"):
+        run_stream(clients=clients, chains=chains, n=n,
+                   json_path=args.json or None, smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -214,12 +214,17 @@ def main() -> None:
     ap.add_argument("--ways", type=int, default=None)
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--depth", type=int, default=DEPTH)
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export + lint a Perfetto trace of the run")
     args = ap.parse_args()
     ways = args.ways or (4 if args.smoke else WAYS)
     n = args.n or (1 << 13 if args.smoke else N)
     print("name,us_per_call,derived")
-    run_topology(ways=ways, n=n, depth=args.depth,
-                 json_path=args.json or None, smoke=args.smoke)
+    from .common import tracing
+
+    with tracing(args.trace_dir, "topology"):
+        run_topology(ways=ways, n=n, depth=args.depth,
+                     json_path=args.json or None, smoke=args.smoke)
 
 
 if __name__ == "__main__":

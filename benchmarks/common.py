@@ -1,11 +1,54 @@
-"""Shared benchmark helpers: timing, CSV emit, app runners."""
+"""Shared benchmark helpers: timing, CSV emit, app runners, tracing."""
 
 from __future__ import annotations
 
+import contextlib
 import time
+from pathlib import Path
 from typing import Callable, Dict, List
 
 ROWS: List[str] = []
+
+
+@contextlib.contextmanager
+def tracing(trace_dir, bench_name: str, *, capacity: int = 1 << 18,
+            lint: bool = True):
+    """Trace one benchmark run end to end (ISSUE 6).
+
+    With a falsy ``trace_dir`` this is a no-op (yields ``None``) — the
+    benchmark runs exactly as before, tracer-free.  Otherwise a fresh
+    process-global :class:`~repro.core.trace.TraceCollector` is
+    installed for the block (every ``HeteContext`` the bench creates
+    attaches automatically), the trace is exported to
+    ``<trace_dir>/TRACE_<bench_name>.json`` (Perfetto-loadable), and
+    ``trace_lint`` validates it — a violation fails the benchmark.
+    """
+    if not trace_dir:
+        yield None
+        return
+    from repro.core.trace import (TraceCollector, global_collector,
+                                  install_global, trace_lint)
+
+    prev = global_collector()
+    tc = TraceCollector(capacity_per_thread=capacity)
+    install_global(tc)
+    try:
+        yield tc
+    finally:
+        install_global(prev)
+    out = Path(trace_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"TRACE_{bench_name}.json"
+    doc = tc.export(str(path))
+    meta = doc["rimms"]
+    print(f"trace: {path} ({meta['n_wall_events']} wall + "
+          f"{meta['n_model_events']} modeled events)", flush=True)
+    if lint:
+        violations = trace_lint(doc)
+        if violations:
+            msg = "\n".join(f"  - {v}" for v in violations)
+            raise AssertionError(
+                f"trace_lint failed for {path}:\n{msg}")
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

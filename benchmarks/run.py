@@ -21,6 +21,9 @@ def main() -> None:
     ap.add_argument("--json-dir", default=None, metavar="DIR",
                     help="write BENCH_*.json records for json-capable "
                          "benches into DIR")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export + lint a Perfetto TRACE_*.json per "
+                         "benchmark into DIR (ISSUE 6)")
     args = ap.parse_args()
     from . import (bench_2fft, bench_2fzf, bench_3zip, bench_alloc,
                    bench_apps, bench_graph, bench_marking,
@@ -68,13 +71,16 @@ def main() -> None:
     if json_dir:
         json_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
+    from .common import tracing
+
     for name, fn in benches.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", flush=True)
         jp = (str(json_dir / json_names[name])
               if json_dir and name in json_names else None)
-        fn(jp)
+        with tracing(args.trace_dir, name):
+            fn(jp)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,10 @@ from .runtime import PE, Runtime, Task, make_emulated_soc
 from .topology import (
     Link, Topology, TopologyBandwidthModel, TopologyError, build_preset,
 )
+from .trace import (
+    Counter, Gauge, Histogram, MetricsRegistry, TraceCollector,
+    global_collector, install_global, trace, trace_lint,
+)
 
 __all__ = [
     "AllocError", "BitsetAllocator", "Extent", "NextFitAllocator", "make_allocator",
@@ -43,4 +47,6 @@ __all__ = [
     "build_preset",
     "PagedKVPool", "gather_kv", "init_pool_arrays", "write_token",
     "PE", "Runtime", "Task", "make_emulated_soc",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "TraceCollector",
+    "global_collector", "install_global", "trace", "trace_lint",
 ]

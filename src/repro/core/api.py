@@ -69,11 +69,14 @@ from .executor import StreamExecutor
 from .graph import GraphBuilder
 from .hete import HeteContext, HeteData
 from .locations import HOST
-from .qos import QoSManager, admission_cost
+from .qos import DEFAULT_CLIENT, BackpressureFull, QoSManager, admission_cost
 from .runtime import Runtime, Task, make_emulated_soc
+from .trace import (MetricsRegistry, TraceCollector, trace,  # noqa: F401
+                    trace_lint)
 
 __all__ = ["OpRegistry", "op", "default_registry", "BufferFuture",
-           "Session", "SessionClient", "SessionClosedError"]
+           "Session", "SessionClient", "SessionClosedError",
+           "TraceCollector", "MetricsRegistry", "trace", "trace_lint"]
 
 
 class SessionClosedError(RuntimeError):
@@ -320,9 +323,20 @@ class Session:
         qos: Optional[QoSManager] = None,
         client_window: int = 64,
         global_window: Optional[int] = None,
+        trace: Union[bool, TraceCollector, None] = None,
     ) -> None:
         self.runtime = runtime
         self.context: HeteContext = runtime.context
+        # Full-lifecycle tracing (ISSUE 6): off by default.  ``trace=True``
+        # attaches a fresh TraceCollector to the context; pass an existing
+        # collector to aggregate several sessions into one trace.
+        if trace:
+            tc = trace if isinstance(trace, TraceCollector) else TraceCollector()
+            self.context.set_tracer(tc)
+        self._trace_pushed = False
+        #: session-lifetime metrics (counters/gauges); qos_report adds
+        #: per-client latency histograms derived from the fair replay
+        self.metrics = MetricsRegistry()
         reg = registry if registry is not None else default_registry
         reg.install(runtime, missing_only=True,
                     extend_supports=("cpu", "gpu"))
@@ -365,6 +379,7 @@ class Session:
         qos: Optional[QoSManager] = None,
         client_window: int = 64,
         global_window: Optional[int] = None,
+        trace: Union[bool, TraceCollector, None] = None,
         **soc_kwargs: Any,
     ) -> "Session":
         """Session over a fresh emulated SoC (see
@@ -379,7 +394,7 @@ class Session:
         rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler)
         return cls(rt, prefetch=prefetch, window=window, registry=registry,
                    qos=qos, client_window=client_window,
-                   global_window=global_window)
+                   global_window=global_window, trace=trace)
 
     # -- tenants (ISSUE 5) ---------------------------------------------------
     def client(self, name: Optional[str] = None, *,
@@ -493,8 +508,35 @@ class Session:
             op_name, ins_hd, outs_hd, params=dict(params), pin=pin,
             name=name or f"{op_name}#{next(self._seq)}", client=cl.name,
         )
-        stall = self.qos.admit(cl.state, admission_cost(task), nowait=nowait)
+        self.metrics.counter("submits").inc()
+        tracer = self.context.tracer
+        if tracer is not None:
+            tracer.instant("submit", "submit", f"tenant:{cl.name}",
+                           {"task": task.name, "op": op_name,
+                            "client": cl.name})
+            t_adm = tracer.now()
+        try:
+            stall = self.qos.admit(cl.state, admission_cost(task),
+                                   nowait=nowait)
+        except BackpressureFull:
+            self.metrics.counter("backpressure_rejections").inc()
+            if tracer is not None:
+                tracer.instant("backpressure_full", "qos",
+                               f"tenant:{cl.name}",
+                               {"task": task.name, "client": cl.name})
+            raise
+        if tracer is not None:
+            tracer.span("qos_admit", "qos", f"tenant:{cl.name}",
+                        t_adm, tracer.now(),
+                        {"task": task.name, "client": cl.name,
+                         "stall_s": stall})
         if stall > 0.0:
+            self.metrics.counter("backpressure_blocks").inc()
+            if tracer is not None:
+                tracer.instant("backpressure_block", "qos",
+                               f"tenant:{cl.name}",
+                               {"task": task.name, "client": cl.name,
+                                "stall_s": stall})
             self.ledger.record_client_stall(cl.name, stall)
         stream_owns_slot = False
         try:
@@ -628,6 +670,45 @@ class Session:
         if not self.closed:
             self.closed = True
             self._stream.close()
+            self._push_trace()
+
+    def _push_trace(self) -> None:
+        """Derive the stream's modeled track group into the tracer —
+        once (the trace shows one deterministic QoS replay of the
+        stream).  No-op without a tracer."""
+        tracer = self.context.tracer
+        if tracer is None or self._trace_pushed:
+            return
+        self._trace_pushed = True
+        timeline, _, finish, release = self._stream.replay(
+            admission=self.qos)
+        with self._sublock:
+            nodes = list(self._builder.nodes)
+        run = tracer.add_timeline(timeline, label="stream")
+        tracer.add_edges(
+            [(d, n.index) for n in nodes for d in sorted(n.deps)], run)
+        tracer.add_tenant_spans(
+            [(nodes[i].task.client or DEFAULT_CLIENT, release[i], end,
+              nodes[i].name, i)
+             for i, end in sorted(finish.items())],
+            run,
+        )
+
+    def export_trace(self, path=None) -> Dict[str, Any]:
+        """Export the session's trace as a Perfetto-loadable dict (JSON
+        written to ``path`` when given — open it in ui.perfetto.dev).
+        Requires the session to have a tracer (``Session(trace=...)``).
+        Best called after :meth:`close`; calling earlier synchronizes
+        (barrier) and freezes the modeled track group at this point."""
+        tracer = self.context.tracer
+        if tracer is None:
+            raise RuntimeError(
+                "session has no tracer — construct with Session(trace=True)"
+            )
+        if not self.closed:
+            self.barrier()
+            self._push_trace()
+        return tracer.export(path)
 
     def _check_open(self) -> None:
         if self.closed:
@@ -668,6 +749,27 @@ class Session:
         :meth:`barrier`)."""
         timeline, makespan, finish, release = self._stream.replay(
             admission=self.qos)
+        with self._sublock:
+            client_of = {
+                i: (self._builder.nodes[i].task.client or DEFAULT_CLIENT)
+                for i in finish
+            }
+        # Fresh registry per call: qos_report() may be called repeatedly
+        # and the replay is a full re-simulation each time — recording
+        # into self.metrics would double-count latencies.
+        reg = MetricsRegistry()
+        for i, end in finish.items():
+            reg.histogram(f"latency_model_s/{client_of[i]}").record(
+                end - release[i])
+        percentiles: Dict[str, Dict[str, float]] = {}
+        for name, hist in reg.histograms():
+            percentiles[name.split("/", 1)[1]] = {
+                "p50": hist.percentile(50),
+                "p95": hist.percentile(95),
+                "p99": hist.percentile(99),
+                "mean": hist.mean,
+                "count": hist.count,
+            }
         return {
             "makespan_model": makespan,
             "timeline": timeline,
@@ -675,4 +777,6 @@ class Session:
             "release_model": release,
             "qos": self.qos.params(),
             "fairness": self.fairness_report(),
+            "latency_percentiles": percentiles,
+            "metrics": self.metrics.snapshot(),
         }

@@ -201,6 +201,7 @@ def _execute_task(rt: "Runtime", task: "Task", pe: "PE",
     ``(w0, w1, tr_s, spill_s, comp_s, out_s, moves)`` — wall bounds plus
     the modeled accounting both executors feed their schedule
     simulations."""
+    tracer = rt.context.tracer
     w0 = time.perf_counter()
     pre = fut.result() if fut is not None else None
     loc = pe.location
@@ -224,12 +225,20 @@ def _execute_task(rt: "Runtime", task: "Task", pe: "PE",
             staged = (staged[0], staged[1] + pre[0][1],
                       staged[2] + pre[0][2], pre[0][3] + staged[3])
     ins, tr_s, sp_s, moves = staged
+    w_staged = time.perf_counter() if tracer is not None else w0
     try:
         outs, comp_s = rt._run_kernel(task, pe, ins)
+        w_comp = time.perf_counter() if tracer is not None else w_staged
         out_s, sp2_s = rt._commit_outputs(task, pe, outs)
     finally:
         rt._unpin_inputs(task, pe.location)
     w1 = time.perf_counter()
+    if tracer is not None:
+        tname = task.name or task.op
+        targs = {"task": tname, "op": task.op, "client": task.client}
+        tracer.span(tname, "stage", f"pe:{pe.name}:stage", w0, w_staged, targs)
+        tracer.span(tname, "compute", f"pe:{pe.name}", w_staged, w_comp, targs)
+        tracer.span(tname, "writeback", f"pe:{pe.name}", w_comp, w1, targs)
     return w0, w1, tr_s, sp_s + sp2_s, comp_s, out_s, moves
 
 
@@ -276,7 +285,7 @@ def replay_schedule(rt: "Runtime", nodes: Sequence[TaskNode],
                 for link, hs, he in hops:
                     timeline.add_transfer(TransferEvent(
                         link=link.label, task=node.name, nbytes=nbytes,
-                        model_start=hs, model_end=he,
+                        model_start=hs, model_end=he, node=i,
                     ))
                 stage_end = max(stage_end, end)
         else:
@@ -290,7 +299,7 @@ def replay_schedule(rt: "Runtime", nodes: Sequence[TaskNode],
             task=node.name, pe=pe_name, wall_start=w0, wall_end=w1,
             model_start=max(ready_m, start - stage_s), model_end=end,
             transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
-            spill_s=spill_s,
+            spill_s=spill_s, compute_start_m=start, node=i,
         ))
         for s in list(node.dependents):
             if s in remaining:
@@ -442,10 +451,17 @@ class _ExecutorBase:
         if every input root's eviction epoch is unchanged once pinned —
         or None when capacity pressure defers to demand staging (never
         evicting bytes another queued task still reads)."""
+        tracer = self.rt.context.tracer
+        t0 = time.perf_counter() if tracer is not None else 0.0
         try:
             staged = self.rt._stage_inputs(task, pe, prefetch=True)
         except PrefetchDeferred:
             return None
+        if tracer is not None:
+            tname = task.name or task.op
+            tracer.span(tname, "stage", f"pe:{pe.name}:stage",
+                        t0, time.perf_counter(),
+                        {"task": tname, "prefetch": True})
         return staged, tuple(hd.root.eviction_epoch for hd in task.inputs)
 
     # -- claims -------------------------------------------------------------
@@ -544,6 +560,10 @@ class GraphExecutor(_ExecutorBase):
             rt.last_makespan_model = max(
                 self._model_finish.values(), default=0.0
             )
+        tracer = rt.context.tracer
+        if tracer is not None:
+            run_label = tracer.add_timeline(rt.timeline, label="graph")
+            tracer.add_edges(graph.edges(), run_label)
         return self._report(graph, wall)
 
     # -- scheduling ---------------------------------------------------------
@@ -672,7 +692,8 @@ class GraphExecutor(_ExecutorBase):
                 model_start=max(ready_m, compute_start_m - stage_s),
                 model_end=finish_m,
                 transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
-                spill_s=spill_s,
+                spill_s=spill_s, compute_start_m=compute_start_m,
+                node=node.index,
             ))
             rt.task_log.append((node.name, pe.name))
             self._records[node.index] = (
@@ -944,11 +965,19 @@ class StreamExecutor(_ExecutorBase):
         if root:
             self._unobserved.append(i)
         ledger = self.rt.context.ledger
+        tracer = self.rt.context.tracer
         work = [i]
         while work:
             j = work.pop()
             self._remaining.pop(j, None)
             ledger.record_client_failure(self._nodes[j].task.client)
+            if tracer is not None:
+                client = self._nodes[j].task.client
+                tracer.instant(
+                    "task_failed", "error",
+                    f"tenant:{client}" if client else "stream",
+                    {"node": j, "task": self._nodes[j].name,
+                     "root": j == i, "error": type(exc).__name__})
             if self._on_done is not None:
                 self._on_done(j, exc)
             for s in sorted(self._nodes[j].dependents):
@@ -979,7 +1008,8 @@ class StreamExecutor(_ExecutorBase):
                 model_start=max(ready_m, compute_start_m - stage_s),
                 model_end=finish_m,
                 transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
-                spill_s=spill_s,
+                spill_s=spill_s, compute_start_m=compute_start_m,
+                node=node.index,
             ))
             rt.task_log.append((node.name, pe.name))
             self._records[node.index] = (

@@ -80,6 +80,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from . import trace as trace_mod
 from .allocator import AllocError, Extent, make_allocator
 from .instrument import TransferLedger
 from .locations import HOST, Location
@@ -327,6 +328,24 @@ class HeteContext:
         # (owner, loc) -> bytes that owner currently reserves in loc's arena
         self._tenant_bytes: Dict[Tuple[str, Location], int] = {}
         self._tls = threading.local()  # .strict, .spill_s
+        # -- tracing (ISSUE 6): off by default; a process-global collector
+        # (benchmarks/run.py --trace-dir) captures contexts at creation.
+        self.tracer = None
+        _global_tracer = trace_mod.global_collector()
+        if _global_tracer is not None:
+            self.set_tracer(_global_tracer)
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a :class:`~repro.core.trace.TraceCollector` (or None to
+        detach).  Registers this context with the collector and wires the
+        ledger so every recorded copy emits a matching trace event."""
+        self.tracer = tracer
+        if tracer is None:
+            self.ledger.tracer = None
+            return
+        label = tracer.register_context(self)
+        baseline = self.ledger.attach_tracer(tracer, label)
+        tracer.set_ledger_baseline(label, baseline)
 
     # -- registry ----------------------------------------------------------
     def register_space(self, space: MemorySpace) -> MemorySpace:
@@ -603,6 +622,12 @@ class HeteContext:
                     if victim is None:
                         if getattr(self._tls, "strict", False):
                             self.ledger.record_prefetch_deferral()
+                            if self.tracer is not None:
+                                self.tracer.instant(
+                                    "prefetch_deferred", "memory",
+                                    f"mem:{loc}",
+                                    {"reason": "quota", "owner": owner,
+                                     "nbytes": root.nbytes})
                             raise PrefetchDeferred(
                                 f"prefetch to {loc} deferred: tenant "
                                 f"{owner!r} is at quota with no evictable "
@@ -630,6 +655,12 @@ class HeteContext:
                     if victim is None:
                         if getattr(self._tls, "strict", False):
                             self.ledger.record_prefetch_deferral()
+                            if self.tracer is not None:
+                                self.tracer.instant(
+                                    "prefetch_deferred", "memory",
+                                    f"mem:{loc}",
+                                    {"reason": "capacity",
+                                     "nbytes": root.nbytes})
                             raise PrefetchDeferred(
                                 f"prefetch to {loc} deferred: reserving "
                                 f"{root.nbytes} B would evict pinned or "
@@ -885,6 +916,15 @@ class HeteContext:
             root.eviction_epoch += 1
             self.ledger.record_eviction(loc, root.nbytes, dirty, wb_s,
                                         target=target, owner=root.owner)
+            if self.tracer is not None:
+                spilled = (target is not None and target.kind != "host"
+                           and dirty > 0)
+                self.tracer.instant(
+                    "spill_to_peer" if spilled else "evict", "memory",
+                    f"mem:{loc}",
+                    {"nbytes": root.nbytes, "dirty_bytes": dirty,
+                     "writeback_s": wb_s, "target": str(target),
+                     "owner": root.owner})
             return True
         finally:
             for h in held:

@@ -80,6 +80,12 @@ class TransferLedger:
     client_stall_s: Counter = dataclasses.field(default_factory=Counter)
     client_evictions: Counter = dataclasses.field(default_factory=Counter)
     client_failures: Counter = dataclasses.field(default_factory=Counter)
+    # -- tracing hook (ISSUE 6): when a TraceCollector is attached, every
+    # record() emits a matching trace event *under the ledger lock*, so
+    # trace_lint's conservation check (trace events == ledger counters)
+    # holds by construction rather than by sampling.
+    tracer: object = dataclasses.field(default=None, repr=False, compare=False)
+    trace_label: str = dataclasses.field(default="", repr=False, compare=False)
     _lock: threading.RLock = dataclasses.field(
         default_factory=threading.RLock, repr=False, compare=False
     )
@@ -97,6 +103,21 @@ class TransferLedger:
             self.bytes_moved[key] += nbytes
             self.modeled_by_pair[key] += seconds
             self.modeled_seconds += seconds
+            if self.tracer is not None:
+                self.tracer.transfer(self.trace_label, key[0], key[1],
+                                     nbytes, seconds)
+
+    def attach_tracer(self, tracer, label: str) -> dict:
+        """Attach a TraceCollector atomically w.r.t. in-flight records.
+
+        Returns the per-link counters already accumulated at attach time
+        — the conservation baseline ``trace_lint`` nets out, since those
+        copies predate the trace."""
+        with self._lock:
+            baseline = self.per_link_summary()
+            self.tracer = tracer
+            self.trace_label = label
+        return baseline
 
     def record_eviction(self, loc: Location, nbytes: int,
                         writeback_bytes: int, stall_s: float,
@@ -248,6 +269,10 @@ class TransferLedger:
             self.client_stall_s.clear()
             self.client_evictions.clear()
             self.client_failures.clear()
+            if self.tracer is not None:
+                # Open a fresh conservation epoch: trace events recorded
+                # before this point no longer correspond to any counter.
+                self.tracer.ledger_reset(self.trace_label)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -284,14 +309,17 @@ ledger = TransferLedger()
 def fresh_ledger(
     led: Optional[TransferLedger] = None,
 ) -> Iterator[TransferLedger]:
-    """Context manager: reset (or swap in) a ledger for one experiment."""
+    """Context manager: reset (or swap in) a ledger for one experiment.
+
+    Semantics (deliberate, tested in ``tests/test_instrument.py``): the
+    target ledger is reset on entry and the counts accumulated inside
+    the block are **kept** on exit — they are the experiment's evidence.
+    Nothing is restored; a caller that needs the pre-experiment counts
+    takes its own :meth:`TransferLedger.snapshot` first.
+    """
     target = led if led is not None else ledger
-    saved = target.snapshot()
     target.reset()
-    try:
-        yield target
-    finally:
-        del saved  # snapshots are for callers; we do not restore
+    yield target
 
 
 class Timer:
@@ -330,6 +358,10 @@ class TimelineEvent:
     compute_s: float  # measured kernel seconds
     out_transfer_s: float = 0.0  # modeled output writeback (reference policy)
     spill_s: float = 0.0  # modeled eviction write-back stall during staging
+    # modeled instant the kernel itself starts (staging + spill done);
+    # -1.0 on legacy events — consumers fall back to model_start+transfer_s
+    compute_start_m: float = -1.0
+    node: int = -1  # graph node index (-1 when not graph-scheduled)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -342,6 +374,7 @@ class TransferEvent:
     nbytes: int
     model_start: float
     model_end: float
+    node: int = -1  # consumer's graph node index (-1 when unknown)
 
 
 class Timeline:
@@ -393,9 +426,9 @@ class Timeline:
         lane per interconnect link (``=`` link busy)."""
         width = max(width, 12)  # room for the axis label row
         evs = self.events()
-        if not evs:
-            return "(empty timeline)"
         xfers = self.transfers()
+        if not evs and not xfers:
+            return "(empty timeline)"
         span = (
             max(
                 [e.model_end for e in evs]

@@ -538,7 +538,7 @@ def fair_replay(
                 for link, hs, he in hops:
                     timeline.add_transfer(TransferEvent(
                         link=link.label, task=node.name, nbytes=nbytes,
-                        model_start=hs, model_end=he,
+                        model_start=hs, model_end=he, node=i,
                     ))
                 stage_end = max(stage_end, end)
         else:
@@ -552,7 +552,7 @@ def fair_replay(
             task=node.name, pe=pe_name, wall_start=w0, wall_end=w1,
             model_start=max(ready_m, start - stage_s), model_end=end,
             transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
-            spill_s=spill_s,
+            spill_s=spill_s, compute_start_m=start, node=i,
         ))
         heapq.heappush(completions, (end, c, k, i))
         for s in sorted(node.dependents):

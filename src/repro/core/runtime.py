@@ -328,7 +328,7 @@ class Runtime:
         return model_s, ctx.take_spill_seconds()
 
     def _add_transfer_lanes(self, topo, task: Task, moves: Sequence[tuple],
-                            start: float) -> float:
+                            start: float, node: int = -1) -> float:
         """Record per-link :class:`TransferEvent` lanes for ``moves``
         issued *concurrently* at modeled time ``start``, walking each
         copy's route through per-link busy-until contention (ISSUE 4
@@ -349,6 +349,7 @@ class Runtime:
                 self.timeline.add_transfer(TransferEvent(
                     link=link.label, task=task.name or task.op,
                     nbytes=nbytes, model_start=hs, model_end=he,
+                    node=node,
                 ))
             end_max = max(end_max, end)
         return end_max - start
@@ -368,25 +369,38 @@ class Runtime:
         topo = getattr(self.context.ledger.bandwidth_model, "topology", None)
         if topo is not None:
             topo.reset_contention()
+        tracer = self.context.tracer
         model_t = 0.0
         t0 = time.perf_counter()
-        for task in tasks:
+        for node_i, task in enumerate(tasks):
             pe = self._schedule(task)
             w0 = time.perf_counter()
             ins, tr_s, sp_s, moves = self._stage_inputs(task, pe)
+            w_staged = time.perf_counter() if tracer is not None else w0
             try:
                 outs, comp_s = self._run_kernel(task, pe, ins)
+                w_comp = time.perf_counter() if tracer is not None else w_staged
                 out_s, sp2_s = self._commit_outputs(task, pe, outs)
             finally:
                 self._unpin_inputs(task, pe.location)
             w1 = time.perf_counter()
+            if tracer is not None:
+                tname = task.name or task.op
+                targs = {"task": tname, "op": task.op, "node": node_i}
+                tracer.span(tname, "stage", f"pe:{pe.name}:stage",
+                            w0, w_staged, targs)
+                tracer.span(tname, "compute", f"pe:{pe.name}",
+                            w_staged, w_comp, targs)
+                tracer.span(tname, "writeback", f"pe:{pe.name}",
+                            w_comp, w1, targs)
             spill_s = sp_s + sp2_s
             stage_m = tr_s
             if topo is not None:
                 # Routed transfer lanes over modeled time: this task's
                 # copies issue concurrently at model_t and queue on
                 # shared links (per-link contention, like graph replay).
-                stage_m = self._add_transfer_lanes(topo, task, moves, model_t)
+                stage_m = self._add_transfer_lanes(topo, task, moves,
+                                                   model_t, node=node_i)
             # Model simulation uses the static compute estimate so serial
             # and graph modeled makespans are directly comparable (see
             # CostModel.prior_estimate).  Spill stalls (eviction
@@ -400,10 +414,13 @@ class Runtime:
                 model_start=model_t, model_end=model_t + dur_m,
                 transfer_s=tr_s, compute_s=comp_s, out_transfer_s=out_s,
                 spill_s=spill_s,
+                compute_start_m=model_t + stage_m + spill_s, node=node_i,
             ))
             model_t += dur_m
             self.task_log.append((task.name or task.op, pe.name))
         self.last_makespan_model = model_t
+        if tracer is not None:
+            tracer.add_timeline(self.timeline, label="serial")
         return time.perf_counter() - t0
 
     def run_graph(

@@ -1,0 +1,136 @@
+"""TransferLedger + Timeline evidence plumbing (ISSUE 6 satellites):
+fresh_ledger semantics, snapshot/reset round-trip, Gantt transfer
+lanes."""
+
+from repro.core.instrument import (
+    Timeline,
+    TimelineEvent,
+    TransferEvent,
+    TransferLedger,
+    fresh_ledger,
+)
+from repro.core.locations import BandwidthModel, Location
+
+HOST = Location("host", "cpu")
+GPU = Location("device", "gpu0")
+
+
+def _ledger():
+    return TransferLedger(bandwidth_model=BandwidthModel())
+
+
+# ---------------------------------------------------------------------------
+# fresh_ledger: reset on entry, counts KEPT on exit (documented semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_ledger_resets_on_entry_and_keeps_counts_on_exit():
+    led = _ledger()
+    led.record(HOST, GPU, 1024)
+    assert led.total_copies == 1
+    with fresh_ledger(led) as inner:
+        assert inner is led
+        assert led.total_copies == 0  # pre-existing counts cleared
+        led.record(HOST, GPU, 2048)
+        led.record(GPU, HOST, 512)
+    # the block's evidence survives the exit — nothing is restored
+    assert led.total_copies == 2
+    assert led.total_bytes == 2560
+
+
+def test_fresh_ledger_defaults_to_module_global():
+    from repro.core.instrument import ledger as global_ledger
+
+    snap = global_ledger.snapshot()  # pre-experiment evidence, caller-kept
+    with fresh_ledger() as led:
+        assert led is global_ledger
+        assert led.total_copies == 0
+    assert snap["total_copies"] >= 0  # snapshot unaffected by the reset
+
+
+# ---------------------------------------------------------------------------
+# snapshot()/reset() round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_reset_round_trip():
+    led = _ledger()
+    led.record(HOST, GPU, 1000)
+    led.record(HOST, GPU, 1000)
+    led.record(GPU, HOST, 500)
+    led.record_eviction(GPU, 256, writeback_bytes=128, stall_s=0.25)
+    led.record_flag_check(3)
+    snap = led.snapshot()
+    assert snap["total_copies"] == 3
+    assert snap["total_bytes"] == 2500
+    assert snap["by_pair"] == {"device:gpu0->host:cpu": 1,
+                               "host:cpu->device:gpu0": 2}
+    assert snap["per_link"]["host:cpu->device:gpu0"]["copies"] == 2
+    assert snap["per_link"]["host:cpu->device:gpu0"]["bytes"] == 2000
+    assert snap["total_evictions"] == 1
+    assert snap["writeback_bytes"] == 128
+    assert snap["flag_checks"] == 3
+
+    led.reset()
+    clean = led.snapshot()
+    assert clean["total_copies"] == 0
+    assert clean["total_bytes"] == 0
+    assert clean["by_pair"] == {}
+    assert clean["per_link"] == {}
+    assert clean["total_evictions"] == 0
+    assert clean["flag_checks"] == 0
+
+    # counting resumes from zero after the reset
+    led.record(HOST, GPU, 64)
+    after = led.snapshot()
+    assert after["total_copies"] == 1
+    assert after["per_link"] == {
+        "host:cpu->device:gpu0": {
+            "copies": 1, "bytes": 64,
+            "modeled_s": after["per_link"]["host:cpu->device:gpu0"]["modeled_s"],
+        }
+    }
+
+
+# ---------------------------------------------------------------------------
+# Timeline.gantt(): transfer lanes and overlap marks
+# ---------------------------------------------------------------------------
+
+
+def _compute(task, pe, t0, t1):
+    return TimelineEvent(task=task, pe=pe, wall_start=0.0, wall_end=0.0,
+                         model_start=t0, model_end=t1,
+                         transfer_s=0.0, compute_s=t1 - t0)
+
+
+def test_gantt_renders_transfers_only_timeline():
+    tl = Timeline()
+    tl.add_transfer(TransferEvent(link="host->gpu0", task="t0",
+                                  nbytes=1024, model_start=0.0,
+                                  model_end=0.5))
+    txt = tl.gantt(40)
+    assert txt != "(empty timeline)"
+    assert "host->gpu0" in txt
+    assert "=" in txt  # link-busy lane rendered
+
+
+def test_gantt_marks_overlap_within_a_lane_with_plus():
+    tl = Timeline()
+    tl.add(_compute("a", "gpu0", 0.0, 0.6))
+    tl.add(_compute("b", "gpu0", 0.4, 1.0))  # overlaps a on the same PE
+    txt = tl.gantt(40)
+    assert "+" in txt
+    assert "#" in txt
+
+
+def test_gantt_compute_and_transfer_lanes_coexist():
+    tl = Timeline()
+    tl.add(_compute("a", "gpu0", 0.2, 1.0))
+    tl.add_transfer(TransferEvent(link="host->gpu0", task="a",
+                                  nbytes=4096, model_start=0.0,
+                                  model_end=0.2))
+    txt = tl.gantt(48)
+    lines = txt.splitlines()
+    assert any(ln.lstrip().startswith("gpu0") and "#" in ln for ln in lines)
+    assert any("host->gpu0" in ln and "=" in ln for ln in lines)
+    assert "(modeled)" in lines[-1]
