@@ -32,19 +32,23 @@ DEPTH = 2
 
 
 def _build(scheduler: str, accelerators, *, policy: str = "rimms",
-           ways: int = WAYS, n: int = N, depth: int = DEPTH):
+           ways: int = WAYS, n: int = N, depth: int = DEPTH,
+           backend=None):
     from repro.apps.radar import make_runtime
     from repro.apps.synthetic import build_fork_join
 
     rt, ctx = make_runtime(policy=policy, n_cpu=0,
-                           accelerators=accelerators, scheduler=scheduler)
+                           accelerators=accelerators, scheduler=scheduler,
+                           backend=backend)
     bufs, tasks = build_fork_join(ctx, ways=ways, n=n, depth=depth)
     return rt, ctx, bufs, tasks
 
 
 def _measure(rt, ctx, tasks, mode: str, repeats: int):
-    run = rt.run if mode == "serial" else rt.run_graph
-    run(tasks)  # warmup: jit compile + first-touch transfers
+    # internal calls → private impls (run/run_graph deprecation warnings
+    # are for user code migrating to Session)
+    run = rt._run_impl if mode == "serial" else rt._run_graph_impl
+    run(tasks)  # warmup: jit compile, worker spawn, first-touch transfers
     ctx.ledger.reset()
     wall = model = float("inf")
     for _ in range(repeats):
@@ -75,22 +79,32 @@ def run(repeats: int = 3, ways: int = WAYS, n: int = N, depth: int = DEPTH) -> N
             )
 
 
-def smoke(json_path: str | None = None) -> None:
+def smoke(json_path: str | None = None, backend: str = "thread") -> None:
     """CI gate: graph mode must (1) match serial outputs bitwise and
     copy-counts exactly under rimms/round_robin, and (2) beat the serial
-    modeled makespan on a 2-accelerator fork-join workload."""
+    modeled makespan on a 2-accelerator fork-join workload.  With
+    ``backend="process"`` the graph case runs on subprocess PE workers
+    (ISSUE 7): the serial case stays in-process, making (1) a
+    cross-backend bit-identity check, and the record additionally gates
+    measured ``wall_speedup_vs_serial`` on runners with ≥ 4 cores."""
     import json
+    import os
     from pathlib import Path
 
     from repro.core.hete import hete_sync
 
+    proc = backend == "process"
     accs = ("gpu0", "gpu1")
-    ways, n, depth, repeats = 4, 1 << 13, 2, 2
+    # process smoke uses compute-dominant sizes (pipe round-trips
+    # dominate tiny problems) and one extra repeat for a stabler min
+    ways, n, depth, repeats = (4, 1 << 15, 2, 3) if proc \
+        else (4, 1 << 13, 2, 2)
 
     rt_s, ctx_s, bufs_s, tasks_s = _build("round_robin", accs,
                                           ways=ways, n=n, depth=depth)
     rt_g, ctx_g, bufs_g, tasks_g = _build("round_robin", accs,
-                                          ways=ways, n=n, depth=depth)
+                                          ways=ways, n=n, depth=depth,
+                                          backend=backend)
     sw, sm, sc = _measure(rt_s, ctx_s, tasks_s, "serial", repeats)
     gw, gm, gc = _measure(rt_g, ctx_g, tasks_g, "graph", repeats)
 
@@ -104,40 +118,59 @@ def smoke(json_path: str | None = None) -> None:
         f"graph modeled makespan {gm * 1e3:.3f} ms not below serial "
         f"{sm * 1e3:.3f} ms on a 2-accelerator fork-join"
     )
+    rt_g.close()
+    rt_s.close()
     emit("graph_smoke", gw * 1e6,
-         f"model_speedup={sm / gm:.2f}x;copies={gc:.0f};OK")
+         f"backend={backend};model_speedup={sm / gm:.2f}x;"
+         f"copies={gc:.0f};OK")
     if json_path:
         # Gated metrics are modeled (deterministic across machines):
         # static placement → exact copy counts and makespan arithmetic.
         rec = {
             "bench": "graph",
+            "backend": backend,
             "params": {"ways": ways, "n": n, "depth": depth,
                        "accelerators": list(accs)},
-            "serial": {"makespan_model": sm, "copies": sc},
-            "graph": {"makespan_model": gm, "copies": gc},
+            "serial": {"makespan_model": sm, "copies": sc, "wall_s": sw},
+            "graph": {"makespan_model": gm, "copies": gc, "wall_s": gw},
             "model_speedup": sm / gm,
             "gate": {"makespan_model": gm, "copies": gc},
         }
+        if proc:
+            wall_vs_serial = sw / max(gw, 1e-12)
+            rec["wall_speedup_vs_serial"] = wall_vs_serial
+            rec["gate_directions"] = {"wall_speedup_vs_serial": "min"}
+            rec["gate_tolerances"] = {"wall_speedup_vs_serial": 0.0}
+            if (os.cpu_count() or 1) >= 4:
+                rec["gate"]["wall_speedup_vs_serial"] = wall_vs_serial
+            else:
+                rec["gate_skipped"] = ["wall_speedup_vs_serial"]
         Path(json_path).write_text(json.dumps(rec, indent=1))
         print(f"wrote {json_path}", flush=True)
-    print("graph smoke: OK", flush=True)
+    print(f"graph smoke: OK (backend={backend})", flush=True)
 
 
 def main() -> None:
+    from repro.core.runtime import BACKENDS, resolve_backend
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small CI run with equivalence + speedup asserts")
     ap.add_argument("--json", default="BENCH_graph.json",
                     help="machine-readable smoke output path ('' to skip)")
+    ap.add_argument("--backend", default="thread", choices=BACKENDS,
+                    help="kernel-execution backend for the graph case")
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="export + lint a Perfetto trace of the run")
     args = ap.parse_args()
+    backend = resolve_backend(args.backend)
     print("name,us_per_call,derived")
     from .common import tracing
 
-    with tracing(args.trace_dir, "graph"):
+    trace_name = "graph" if backend == "thread" else f"graph_{backend}"
+    with tracing(args.trace_dir, trace_name):
         if args.smoke:
-            smoke(args.json or None)
+            smoke(args.json or None, backend=backend)
         else:
             run()
 

@@ -23,6 +23,14 @@ global barrier.  Three claims are checked:
 
 Emits ``BENCH_stream.json`` for the CI perf-regression gate.
 
+With ``--backend process`` (ISSUE 7) the stream case executes kernels in
+subprocess PE workers against shared-memory host arenas; the record then
+adds **measured wall-clock** speedups — ``wall_speedup_vs_serial``
+(gated ≥ baseline on runners with ≥ 4 cores, skipped below) and
+``wall_speedup_vs_thread`` (reported) — plus a bitwise identity check
+against the thread-backend stream.  Modeled gates are identical across
+backends by construction (static priors + deterministic replay).
+
 Run:  PYTHONPATH=src python -m benchmarks.bench_stream [--smoke] [--json PATH]
 """
 
@@ -30,7 +38,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import threading
+import time
 from pathlib import Path
 
 import numpy as np
@@ -40,7 +50,12 @@ from .common import emit
 CLIENTS = 8
 CHAINS = 8
 N = 1 << 14
+N_PROCESS = 1 << 15  # compute-dominant sizes for wall-clock comparisons
 ACCELERATORS = ("gpu0", "gpu1")
+
+# Wall-clock gates need real cores: on fewer the process backend cannot
+# be expected to beat in-process serial, so the gate is marked skipped.
+MIN_CORES_FOR_WALL_GATE = 4
 
 
 def _chain_seed(client: int, chain: int) -> int:
@@ -48,7 +63,8 @@ def _chain_seed(client: int, chain: int) -> int:
 
 
 def _stream_case(*, clients: int, chains: int, n: int, accelerators,
-                 scheduler: str = "round_robin", pin: bool = True) -> dict:
+                 scheduler: str = "round_robin", pin: bool = True,
+                 backend=None, warm: bool = False) -> dict:
     """N client threads stream pinned 2FZF chains against one session;
     returns outputs (client-major), ledger snapshot, replayed modeled
     makespan, and wall seconds."""
@@ -56,8 +72,21 @@ def _stream_case(*, clients: int, chains: int, n: int, accelerators,
 
     session = make_session(
         policy="rimms", scheduler=scheduler, n_cpu=0,
-        accelerators=accelerators,
+        accelerators=accelerators, backend=backend,
     )
+    if warm:
+        # One pinned chain per accelerator: spawns process workers,
+        # pays jit compiles at shape n, and first-touch staging — the
+        # measured window below is then steady-state.  (Thread-backend
+        # default runs stay warmup-free so their modeled record matches
+        # the committed BENCH_stream.json baseline exactly.)
+        warm_futs = [
+            submit_2fzf(session, n, pins=(pe,) * 4, seed=7,
+                        tag=f"_warm{i}")["out"]
+            for i, pe in enumerate(accelerators)
+        ]
+        for f in warm_futs:
+            f.result(timeout=600)
     outs: dict = {}
     errors: list = []
 
@@ -80,6 +109,7 @@ def _stream_case(*, clients: int, chains: int, n: int, accelerators,
     session.ledger.reset()
     threads = [threading.Thread(target=client, args=(c,))
                for c in range(clients)]
+    t0 = time.perf_counter()
     for t in threads:
         t.start()
     for t in threads:
@@ -87,6 +117,7 @@ def _stream_case(*, clients: int, chains: int, n: int, accelerators,
     if errors:
         raise errors[0]
     session.barrier()
+    wall_meas = time.perf_counter() - t0
     rep = session.report()
     snap = session.ledger.snapshot()
     out = np.stack([np.stack(outs[c]) for c in range(clients)])
@@ -94,6 +125,9 @@ def _stream_case(*, clients: int, chains: int, n: int, accelerators,
     session.runtime.close()
     return {
         "wall_s": rep["wall_s"],
+        # submit→drain window only (excludes session startup + warmup;
+        # rep["wall_s"] counts from executor construction)
+        "wall_meas_s": wall_meas,
         "makespan_model": rep["makespan_model"],
         "copies": snap["total_copies"],
         "bytes": snap["total_bytes"],
@@ -104,14 +138,27 @@ def _stream_case(*, clients: int, chains: int, n: int, accelerators,
 
 
 def _batch_case(mode: str, *, clients: int, chains: int, n: int,
-                accelerators) -> dict:
+                accelerators, backend=None, warm: bool = False) -> dict:
     """The same chains as one batch task list (pins mirror the stream's
     per-client pinning) through serial run() or batch run_graph()."""
     from repro.apps.radar import build_2fzf, make_runtime
     from repro.core.hete import hete_sync
 
     rt, ctx = make_runtime(policy="rimms", scheduler="round_robin",
-                           n_cpu=0, accelerators=accelerators)
+                           n_cpu=0, accelerators=accelerators,
+                           backend=backend)
+    # internal calls → private impls (the run/run_graph deprecation
+    # warning is for user code migrating to Session)
+    impl = rt._run_impl if mode == "serial" else rt._run_graph_impl
+    if warm:
+        # jit compiles + first-touch on throwaway buffers, so the
+        # measured run below is steady-state wall (its per-buffer copy
+        # counts are untouched: the warm chains are separate mallocs)
+        warm_tasks = []
+        for i, pe in enumerate(accelerators):
+            _, wt = build_2fzf(ctx, n, pins=(pe,) * 4, seed=7)
+            warm_tasks += wt
+        impl(warm_tasks)
     all_bufs, tasks = [], []
     for c in range(clients):
         pe = accelerators[c % len(accelerators)]
@@ -123,7 +170,7 @@ def _batch_case(mode: str, *, clients: int, chains: int, n: int,
             row.append(bufs)
         all_bufs.append(row)
     ctx.ledger.reset()
-    wall = (rt.run if mode == "serial" else rt.run_graph)(tasks)
+    wall = impl(tasks)
     out = np.stack([
         np.stack([hete_sync(bufs["out"], context=ctx) for bufs in row])
         for row in all_bufs
@@ -143,14 +190,28 @@ def _batch_case(mode: str, *, clients: int, chains: int, n: int,
     }
 
 
-def run_stream(*, clients: int, chains: int, n: int, json_path, smoke) -> dict:
+def run_stream(*, clients: int, chains: int, n: int, json_path, smoke,
+               backend: str = "thread") -> dict:
+    from repro.core.runtime import resolve_backend
+
+    backend = resolve_backend(backend)
+    proc = backend == "process"
     accs = ACCELERATORS
     stream = _stream_case(clients=clients, chains=chains, n=n,
-                          accelerators=accs)
+                          accelerators=accs, backend=backend, warm=proc)
+    # batch + serial baselines always run in-process (thread backend):
+    # serial wall is THE wall-clock reference the process backend must
+    # beat, and batch-graph outputs double as the cross-backend
+    # bit-identity reference.
     batch = _batch_case("graph", clients=clients, chains=chains, n=n,
                         accelerators=accs)
     serial = _batch_case("serial", clients=clients, chains=chains, n=n,
-                         accelerators=accs)
+                         accelerators=accs, warm=proc)
+    stream_thread = None
+    if proc:
+        stream_thread = _stream_case(clients=clients, chains=chains, n=n,
+                                     accelerators=accs, backend="thread",
+                                     warm=True)
 
     identical = bool(np.array_equal(stream["_out"], batch["_out"]))
     copies_match = stream["by_pair"] == batch["by_pair"]
@@ -176,6 +237,7 @@ def run_stream(*, clients: int, chains: int, n: int, json_path, smoke) -> dict:
 
     rec = {
         "bench": "stream",
+        "backend": backend,
         "params": {"clients": clients, "chains": chains, "n": n,
                    "accelerators": list(accs)},
         "stream": {k: v for k, v in stream.items()
@@ -196,6 +258,31 @@ def run_stream(*, clients: int, chains: int, n: int, json_path, smoke) -> dict:
         },
     }
 
+    if proc:
+        wall_vs_serial = serial["wall_s"] / max(stream["wall_meas_s"], 1e-12)
+        wall_vs_thread = (stream_thread["wall_meas_s"]
+                          / max(stream["wall_meas_s"], 1e-12))
+        identical_thread = bool(np.array_equal(stream["_out"],
+                                               stream_thread["_out"]))
+        rec["wall_speedup_vs_serial"] = wall_vs_serial
+        rec["wall_speedup_vs_thread"] = wall_vs_thread
+        rec["bit_identical_vs_thread"] = identical_thread
+        # The wall gate is real measured time, gated as higher-is-better
+        # (direction "min": FAIL below baseline*(1-tol)) — but only on
+        # runners with enough cores to make the comparison meaningful.
+        rec["gate_directions"] = {"wall_speedup_vs_serial": "min"}
+        rec["gate_tolerances"] = {"wall_speedup_vs_serial": 0.0}
+        if (os.cpu_count() or 1) >= MIN_CORES_FOR_WALL_GATE:
+            rec["gate"]["wall_speedup_vs_serial"] = wall_vs_serial
+        else:
+            rec["gate_skipped"] = ["wall_speedup_vs_serial"]
+        emit(
+            "stream_process_wall", stream["wall_meas_s"] * 1e6,
+            f"vs_serial={wall_vs_serial:.2f}x;vs_thread={wall_vs_thread:.2f}x;"
+            f"cores={os.cpu_count()};bit_identical_vs_thread="
+            f"{identical_thread}",
+        )
+
     if smoke:
         assert identical, "streamed outputs differ from batch run_graph"
         assert copies_match, (
@@ -206,7 +293,16 @@ def run_stream(*, clients: int, chains: int, n: int, json_path, smoke) -> dict:
             f"stream modeled throughput only {throughput_x:.2f}x the "
             f"serial-batch baseline (acceptance: >=1x)"
         )
-        print(f"stream smoke: OK ({clients} clients, "
+        if proc:
+            assert rec["bit_identical_vs_thread"], (
+                "process-backend stream outputs differ bitwise from the "
+                "thread-backend stream"
+            )
+            assert stream["by_pair"] == stream_thread["by_pair"], (
+                f"process copy counts differ from thread: "
+                f"{stream['by_pair']} vs {stream_thread['by_pair']}"
+            )
+        print(f"stream smoke: OK ({clients} clients, backend={backend}, "
               f"{throughput_x:.2f}x serial throughput, "
               f"copies match batch)", flush=True)
 
@@ -216,33 +312,46 @@ def run_stream(*, clients: int, chains: int, n: int, json_path, smoke) -> dict:
     return rec
 
 
-def run(clients: int = CLIENTS, chains: int = CHAINS, n: int = N) -> None:
+def run(clients: int = CLIENTS, chains: int = CHAINS, n: int = N,
+        backend: str = "thread") -> None:
     run_stream(clients=clients, chains=chains, n=n, json_path=None,
-               smoke=False)
+               smoke=False, backend=backend)
 
 
 def main() -> None:
+    from repro.core.runtime import BACKENDS, resolve_backend
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small CI run with bit-identity + copy-count + "
                          "throughput asserts")
     ap.add_argument("--json", default="BENCH_stream.json",
                     help="machine-readable output path ('' to skip)")
+    ap.add_argument("--backend", default="thread", choices=BACKENDS,
+                    help="kernel-execution backend for the stream case "
+                         "(process adds wall-clock speedup metrics vs the "
+                         "in-process serial + thread baselines)")
     ap.add_argument("--clients", type=int, default=None)
     ap.add_argument("--chains", type=int, default=None)
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="export + lint a Perfetto trace of the run")
     args = ap.parse_args()
+    backend = resolve_backend(args.backend)
     clients = args.clients or (4 if args.smoke else CLIENTS)
     chains = args.chains or (6 if args.smoke else CHAINS)
-    n = args.n or (1 << 13 if args.smoke else N)
+    # process smoke uses compute-dominant sizes: at tiny n the pipe
+    # round-trip dominates and wall comparisons measure only overhead
+    n = args.n or ((N_PROCESS if backend == "process" else 1 << 13)
+                   if args.smoke else N)
     print("name,us_per_call,derived")
     from .common import tracing
 
-    with tracing(args.trace_dir, "stream"):
+    trace_name = "stream" if backend == "thread" else f"stream_{backend}"
+    with tracing(args.trace_dir, trace_name):
         run_stream(clients=clients, chains=chains, n=n,
-                   json_path=args.json or None, smoke=args.smoke)
+                   json_path=args.json or None, smoke=args.smoke,
+                   backend=backend)
 
 
 if __name__ == "__main__":

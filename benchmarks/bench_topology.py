@@ -92,7 +92,7 @@ def _run_spill(topology, *, ways, n, constrained: bool):
     points, tasks = _parallel_fzf(ctx, ways, n, use_fragment=True, seed=0)
     for t in tasks:
         t.pin = "gpu0"
-    wall = rt.run(tasks)  # serial: deterministic victim order
+    wall = rt._run_impl(tasks)  # serial: deterministic victim order
     snap = ctx.ledger.snapshot()
     out = np.stack([
         hete_sync(points["out"][1][i], context=ctx) for i in range(ways)

@@ -14,6 +14,13 @@ baseline file may override per metric via a top-level
 the records they emit, so committing a record as the baseline carries
 its tolerances along.
 
+Directions: gates default to upper bounds (lower is better).  A baseline
+``"gate_directions": {"metric": "min"}`` flips a metric to a lower bound
+(higher is better — e.g. the process backend's measured
+``wall_speedup_vs_serial``).  A produced record may list metrics it
+could not measure this run under ``"gate_skipped"`` (e.g. wall gates on
+a runner with too few cores); those report SKIP instead of failing.
+
 Reporting: a per-metric baseline-vs-current table with percent deltas is
 always printed; ``--report PATH`` appends the same table as GitHub
 markdown (CI points it at ``$GITHUB_STEP_SUMMARY``), and ``--json PATH``
@@ -69,8 +76,25 @@ def check_file(produced: Path, baselines: Path, tolerance: float) -> dict:
         return out
     # Per-metric overrides live in the BASELINE (the committed contract).
     tols = dict(base.get("gate_tolerances", {}))
+    # Direction per metric: "max" (default) gates an upper bound — lower
+    # is better, FAIL above ref*(1+tol); "min" gates a lower bound —
+    # higher is better (e.g. wall_speedup_vs_serial), FAIL below
+    # ref*(1-tol).
+    directions = dict(base.get("gate_directions", {}))
+    # A produced record may declare baseline metrics it could not
+    # measure this run (e.g. wall gates on a runner with too few cores)
+    # — reported as SKIP, not as a vanished metric.
+    skipped = set(rec.get("gate_skipped", []))
     for key, ref in sorted(gate_base.items()):
         if key not in gate:
+            if key in skipped:
+                out["rows"].append({
+                    "metric": key, "baseline": ref, "current": None,
+                    "delta_pct": None,
+                    "tolerance": tols.get(key, tolerance),
+                    "status": "SKIP",
+                })
+                continue
             out["failures"].append(
                 f"{produced.name}: gated metric {key!r} vanished"
             )
@@ -82,17 +106,25 @@ def check_file(produced: Path, baselines: Path, tolerance: float) -> dict:
             continue
         val = gate[key]
         tol = float(tols.get(key, tolerance))
-        limit = ref * (1.0 + tol)
+        direction = directions.get(key, "max")
+        if direction == "min":
+            limit = ref * (1.0 - tol)
+            failed = val < limit
+            over = f"<{tol * 100:.0f}% under"
+        else:
+            limit = ref * (1.0 + tol)
+            failed = val > limit
+            over = f">{tol * 100:.0f}% over"
         delta = (val - ref) / ref * 100 if ref else 0.0
-        status = "FAIL" if val > limit else "ok"
+        status = "FAIL" if failed else "ok"
         out["rows"].append({
             "metric": key, "baseline": ref, "current": val,
             "delta_pct": delta, "tolerance": tol, "status": status,
         })
-        if val > limit:
+        if failed:
             out["failures"].append(
                 f"{produced.name}: {key} regressed {delta:+.1f}% "
-                f"(>{tol * 100:.0f}% over baseline {_fmt(ref)})"
+                f"({over} baseline {_fmt(ref)})"
             )
     return out
 
@@ -122,8 +154,8 @@ def markdown_report(results: List[dict]) -> str:
             delta = ("" if row["delta_pct"] is None
                      else f"{row['delta_pct']:+.1f}%")
             cur = "" if row["current"] is None else _fmt(row["current"])
-            mark = {"ok": "✅", "FAIL": "❌", "MISSING": "❌"}.get(
-                row["status"], row["status"])
+            mark = {"ok": "✅", "FAIL": "❌", "MISSING": "❌",
+                    "SKIP": "⏭️"}.get(row["status"], row["status"])
             lines.append(
                 f"| {res['name']} | `{row['metric']}` | "
                 f"{_fmt(row['baseline'])} | {cur} | {delta} | "

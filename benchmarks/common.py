@@ -72,20 +72,26 @@ def time_it(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
 
 def run_app(builder, *, policy: str, accelerators=("gpu0",), n_cpu: int = 1,
             scheduler: str = "round_robin", repeats: int = 5,
-            allocator: str = "nextfit", builder_kwargs=None) -> Dict:
-    """Build + run one radar app; returns measured/modeled time + ledger."""
+            allocator: str = "nextfit", backend=None,
+            builder_kwargs=None) -> Dict:
+    """Build + run one radar app; returns measured/modeled time + ledger.
+    ``backend`` selects kernel execution (thread | process | auto,
+    ISSUE 7); the serial dispatch goes through the private impl so the
+    Runtime.run deprecation warning stays pointed at user code."""
     from repro.apps.radar import make_runtime
 
     rt, ctx = make_runtime(policy=policy, scheduler=scheduler, n_cpu=n_cpu,
-                           accelerators=accelerators, allocator=allocator)
+                           accelerators=accelerators, allocator=allocator,
+                           backend=backend)
     bufs, tasks = builder(ctx, **(builder_kwargs or {}))
-    rt.run(tasks)  # warmup (jit compile)
+    rt._run_impl(tasks)  # warmup (jit compile)
     ctx.ledger.reset()
     t0 = time.perf_counter()
     for _ in range(repeats):
-        rt.run(tasks)
+        rt._run_impl(tasks)
     wall = (time.perf_counter() - t0) / repeats
     snap = ctx.ledger.snapshot()
+    rt.close()
     return {
         "wall_s": wall,
         "copies": snap["total_copies"] / repeats,

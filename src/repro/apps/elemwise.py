@@ -1,0 +1,64 @@
+"""Numpy-only elementwise kernels — backend-parity fixtures (ISSUE 7).
+
+Pure-numpy ``@rimms.op`` kernels registered for every PE kind, with no
+jax anywhere in their import chain: a process PE worker shipping these
+by reference spawns in "import numpy" time, which keeps the
+thread-vs-process parity tests fast.  They are also bit-deterministic by
+construction (same numpy call, same bytes) on any backend.
+
+Module-level functions only — the process backend ships kernels by
+pickle reference, so closures/lambdas would not survive the trip.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.api import op
+
+KINDS = ("cpu", "acc", "gpu")
+
+
+@op("scale", kinds=KINDS)
+def scale(ins, *, factor: float = 2.0):
+    return np.asarray(ins[0]) * factor
+
+
+@op("axpy", kinds=KINDS)
+def axpy(ins, *, alpha: float = 1.0):
+    return alpha * np.asarray(ins[0]) + np.asarray(ins[1])
+
+
+@op("square", kinds=KINDS)
+def square(ins):
+    return np.square(np.asarray(ins[0]))
+
+
+@op("csum", kinds=KINDS)
+def csum(ins):
+    return np.cumsum(np.asarray(ins[0]), dtype=np.float64)
+
+
+@op("snooze", kinds=KINDS)
+def snooze(ins, *, seconds: float = 0.05):
+    """Sleep then pass through — wall-clock overlap fixtures."""
+    import time
+
+    time.sleep(seconds)
+    return np.asarray(ins[0])
+
+
+@op("boom", kinds=KINDS)
+def boom(ins):
+    """Deterministic failure — exception-propagation fixtures."""
+    raise ValueError("boom kernel always fails")
+
+
+@op("die", kinds=KINDS)
+def die(ins):
+    """Kill the executing process — worker-death fixtures.  On the
+    thread backend this would kill the whole interpreter, so tests only
+    run it under the process backend."""
+    import os
+
+    os._exit(17)

@@ -94,15 +94,18 @@ def register_kernels(rt: Runtime) -> None:
 
 def make_runtime(*, policy: str, scheduler: str = "round_robin",
                  n_cpu: int = 1, accelerators: Sequence[str] = ("gpu0",),
-                 allocator: str = "nextfit", tracking: str = "flag"):
+                 allocator: str = "nextfit", tracking: str = "flag",
+                 backend: Optional[str] = None):
     """Build (Runtime, HeteContext) for an emulated SoC.  ``scheduler``
     may be any of :data:`repro.core.runtime.SCHEDULERS`, including the
-    transfer-aware ``"heft"`` used by the graph executor."""
+    transfer-aware ``"heft"`` used by the graph executor; ``backend``
+    is the kernel-execution backend (thread | process | auto)."""
     pes, ctx = make_emulated_soc(
         n_cpu=n_cpu, accelerators=tuple(accelerators), allocator=allocator,
-        tracking=tracking,
+        tracking=tracking, backend=backend,
     )
-    rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler)
+    rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler,
+                 backend=backend)
     register_kernels(rt)
     return rt, ctx
 
@@ -125,10 +128,13 @@ def run_pipeline(rt: Runtime, tasks, *, mode: str = "serial",
     """Execute a built task list either serially (CEDR-style submission
     order) or on the async task-graph executor (automatic DAG, per-PE
     queues, transfer/compute overlap).  Returns wall seconds."""
+    # internal calls go through the private impls: the DeprecationWarning
+    # on run/run_graph is for user code migrating to Session, not for the
+    # compat helpers themselves
     if mode == "serial":
-        return rt.run(tasks)
+        return rt._run_impl(tasks)
     if mode == "graph":
-        return rt.run_graph(tasks, scheduler=scheduler)
+        return rt._run_graph_impl(tasks, scheduler=scheduler)
     raise ValueError(f"unknown execution mode {mode!r} (serial|graph)")
 
 

@@ -21,7 +21,12 @@ from .qos import (
     admission_cost, fair_replay,
 )
 from .paged_kv import PagedKVPool, gather_kv, init_pool_arrays, write_token
-from .runtime import PE, Runtime, Task, make_emulated_soc
+from .pworker import ProcessWorker, ProcessWorkerPool, WorkerDied
+from .runtime import (
+    BACKENDS, PE, Runtime, Task, make_emulated_soc, platform_names,
+    register_platform, resolve_backend,
+)
+from .shm import SharedHostArena, describe_array, resolve_handle
 from .topology import (
     Link, Topology, TopologyBandwidthModel, TopologyError, build_preset,
 )
@@ -46,7 +51,10 @@ __all__ = [
     "Link", "Topology", "TopologyBandwidthModel", "TopologyError",
     "build_preset",
     "PagedKVPool", "gather_kv", "init_pool_arrays", "write_token",
+    "ProcessWorker", "ProcessWorkerPool", "WorkerDied",
     "PE", "Runtime", "Task", "make_emulated_soc",
+    "BACKENDS", "resolve_backend", "register_platform", "platform_names",
+    "SharedHostArena", "describe_array", "resolve_handle",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "TraceCollector",
     "global_collector", "install_global", "trace", "trace_lint",
 ]

@@ -70,13 +70,17 @@ from .graph import GraphBuilder
 from .hete import HeteContext, HeteData
 from .locations import HOST
 from .qos import DEFAULT_CLIENT, BackpressureFull, QoSManager, admission_cost
-from .runtime import Runtime, Task, make_emulated_soc
+from .runtime import (BACKENDS, Runtime, Task,  # noqa: F401
+                      make_emulated_soc, platform_names, register_platform,
+                      resolve_backend)
 from .trace import (MetricsRegistry, TraceCollector, trace,  # noqa: F401
                     trace_lint)
 
 __all__ = ["OpRegistry", "op", "default_registry", "BufferFuture",
            "Session", "SessionClient", "SessionClosedError",
-           "TraceCollector", "MetricsRegistry", "trace", "trace_lint"]
+           "TraceCollector", "MetricsRegistry", "trace", "trace_lint",
+           "BACKENDS", "resolve_backend", "register_platform",
+           "platform_names"]
 
 
 class SessionClosedError(RuntimeError):
@@ -324,8 +328,13 @@ class Session:
         client_window: int = 64,
         global_window: Optional[int] = None,
         trace: Union[bool, TraceCollector, None] = None,
+        backend: Optional[str] = None,
     ) -> None:
         self.runtime = runtime
+        # Execution backend (ISSUE 7): None adopts the runtime's;
+        # "thread" | "process" | "auto" re-resolves it (unknown names
+        # raise listing the valid choices).
+        self.backend = runtime.set_backend(backend)
         self.context: HeteContext = runtime.context
         # Full-lifecycle tracing (ISSUE 6): off by default.  ``trace=True``
         # attaches a fresh TraceCollector to the context; pass an existing
@@ -368,6 +377,7 @@ class Session:
     @classmethod
     def emulated(
         cls,
+        platform: Optional[str] = None,
         *,
         policy: str = "rimms",
         scheduler: str = "heft",
@@ -380,6 +390,7 @@ class Session:
         client_window: int = 64,
         global_window: Optional[int] = None,
         trace: Union[bool, TraceCollector, None] = None,
+        backend: Optional[str] = None,
         **soc_kwargs: Any,
     ) -> "Session":
         """Session over a fresh emulated SoC (see
@@ -387,11 +398,34 @@ class Session:
         ``soc_kwargs``: ``arena_bytes``, ``topology``, ``acc_ops``, …).
         The default scheduler is the windowed ``heft`` — the streaming
         placement the session exists for; pass ``"round_robin"`` for
-        bit-identical-to-serial static placement."""
+        bit-identical-to-serial static placement.
+
+        ``platform`` names a preset from the shorthand registry
+        (:func:`~repro.core.runtime.register_platform`; built-ins listed
+        by :func:`~repro.core.runtime.platform_names`):
+        ``Session.emulated("nvlink_mesh")`` applies the preset's routed
+        topology and default arena capacity, with explicit keywords
+        still winning.  ``backend`` selects kernel execution —
+        ``"thread"`` | ``"process"`` | ``"auto"`` (ISSUE 7)."""
+        if platform is not None:
+            from .runtime import _resolve_platform
+
+            entry = _resolve_platform(platform)
+            if entry is None:
+                raise ValueError(
+                    f"unknown platform {platform!r}: registered presets "
+                    f"are {platform_names()}")
+            factory, preset_arena = entry
+            if factory is not None:
+                soc_kwargs.setdefault("topology", platform)
+            if preset_arena is not None:
+                soc_kwargs.setdefault("arena_bytes", preset_arena)
         pes, ctx = make_emulated_soc(
-            n_cpu=n_cpu, accelerators=tuple(accelerators), **soc_kwargs
+            n_cpu=n_cpu, accelerators=tuple(accelerators), backend=backend,
+            **soc_kwargs
         )
-        rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler)
+        rt = Runtime(pes, ctx, policy=policy, scheduler=scheduler,
+                     backend=backend)
         return cls(rt, prefetch=prefetch, window=window, registry=registry,
                    qos=qos, client_window=client_window,
                    global_window=global_window, trace=trace)
@@ -400,16 +434,20 @@ class Session:
     def client(self, name: Optional[str] = None, *,
                weight: Optional[float] = None,
                window: Optional[int] = None,
-               quota_bytes: Optional[int] = None) -> SessionClient:
+               quota_bytes: Optional[int] = None,
+               think_s: Optional[float] = None) -> SessionClient:
         """A named tenant handle: its submissions run under ``weight``
         (DRR admission share), a bounded in-flight ``window``
         (backpressure), and an optional per-device-arena reservation
-        ``quota_bytes``.  Calling again with the same name updates the
-        passed settings and returns a handle to the same client."""
+        ``quota_bytes``.  ``think_s`` declares the client's closed-loop
+        think time so the deterministic QoS replay (``qos_report``)
+        models its pacing instead of an open-loop burst.  Calling again
+        with the same name updates the passed settings and returns a
+        handle to the same client."""
         if name is None:
             name = f"client{next(self._client_seq)}"
         state = self.qos.client(name, weight=weight, window=window,
-                                quota_bytes=quota_bytes)
+                                quota_bytes=quota_bytes, think_s=think_s)
         if quota_bytes is not None:
             self.context.set_quota(name, quota_bytes)
         return SessionClient(self, state)

@@ -1158,6 +1158,7 @@ class StreamExecutor(_ExecutorBase):
             "n_failed": failed,
             "scheduler": self.scheduler,
             "policy": self.rt.policy,
+            "backend": self.rt.backend,
             "prefetch": self.prefetch,
             "topology": self._topo.name if self._topo is not None else None,
             "per_pe_busy_model_s": per_pe,

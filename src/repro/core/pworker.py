@@ -1,0 +1,354 @@
+"""Process-backed PE workers (ISSUE 7 tentpole).
+
+Each eligible PE gets one subprocess (spawned lazily on first use) that
+executes registered ``@rimms.op`` kernels against host payloads.  Arrays
+whose bytes live in a :class:`~repro.core.shm.SharedHostArena` cross the
+process boundary as zero-copy handles; everything else is sent inline.
+Kernels are shipped once per ``(op, pe kind)`` by *reference* (standard
+pickle of a module-level function), so the worker imports exactly the
+module that defined the kernel — numpy-only kernel modules spawn in
+milliseconds, jax ones pay one XLA import per worker.
+
+The pool deliberately changes nothing about scheduling or the memory
+model: staging, flag checks, the transfer ledger and the modeled replay
+all run in the parent exactly as under the thread backend — only the
+kernel call itself moves out of the GIL.  Per-PE serialization is
+preserved (one pipe per worker, one executing thread per PE), which is
+also what keeps forwarded worker spans non-overlapping on their tracks.
+
+Failure model: a worker that dies mid-call surfaces as
+:class:`WorkerDied` (with the exit code) from the task that was running
+on it — a clean per-task error through the session's existing failure
+paths, never a hang.  ``shutdown()`` asks workers to exit, then joins
+and finally kills stragglers, so ``Runtime.close()`` reaps every
+subprocess.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+import threading
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import shm as shm_mod
+
+__all__ = ["WorkerDied", "ProcessWorker", "ProcessWorkerPool", "worker_main"]
+
+# Scratch segment each worker allocates for its outputs (grown on demand).
+_SCRATCH_START = 8 << 20
+
+
+class WorkerDied(RuntimeError):
+    """A PE worker subprocess exited while (or before) running a task."""
+
+
+# ---------------------------------------------------------------------------
+# Worker side (runs in the subprocess)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_payloads(handles: List[Tuple[str, Any]]) -> List[Any]:
+    out = []
+    for kind, payload in handles:
+        if kind == "shm":
+            out.append(shm_mod.resolve_handle(payload))
+        else:  # "inline"
+            out.append(payload)
+    return out
+
+
+class _Scratch:
+    """Bump allocator over the worker's own shared segment for outputs.
+
+    Reset every task: the parent copies results out before it sends the
+    next task on this pipe, so reuse is safe.
+    """
+
+    def __init__(self) -> None:
+        self.shm = None
+        self.size = 0
+        self.off = 0
+
+    def _ensure(self, nbytes: int) -> None:
+        if self.shm is not None and self.off + nbytes <= self.size:
+            return
+        need = max(self.size * 2, self.off + nbytes, _SCRATCH_START)
+        old = self.shm
+        from multiprocessing import shared_memory
+
+        self.shm = shared_memory.SharedMemory(create=True, size=need)
+        self.size = need
+        self.off = 0
+        if old is not None:
+            old.close()
+            old.unlink()
+
+    def place(self, arr: np.ndarray) -> Tuple[str, Any]:
+        """Copy ``arr`` into scratch, return a handle (or inline on any
+        shared-memory failure)."""
+        arr = np.ascontiguousarray(arr)
+        try:
+            self._ensure(arr.nbytes)
+        except Exception:  # pragma: no cover - /dev/shm exhausted
+            return ("inline", arr)
+        off = self.off
+        view = np.ndarray(arr.shape, dtype=arr.dtype, buffer=self.shm.buf,
+                          offset=off)
+        np.copyto(view, arr)
+        # 64-byte align the next placement (matches SharedHostArena).
+        self.off = off + ((arr.nbytes + 63) & ~63)
+        return ("shm", (self.shm.name, off, arr.shape, arr.dtype.str))
+
+    def reset(self) -> None:
+        self.off = 0
+
+    def destroy(self) -> None:
+        if self.shm is not None:
+            try:
+                self.shm.close()
+                self.shm.unlink()
+            except Exception:  # pragma: no cover
+                pass
+            self.shm = None
+
+
+def _to_host(value: Any) -> np.ndarray:
+    """Worker-side egress: kernels may return jax arrays; ship numpy."""
+    if isinstance(value, np.ndarray):
+        return value
+    return np.asarray(value)
+
+
+def worker_main(conn, pe_name: str) -> None:
+    """Subprocess entry point: serve kernel calls over ``conn``.
+
+    Protocol (parent → worker / worker → parent):
+
+    * ``("init",)`` → ``("ready", pid, perf_counter)`` — the clock reply
+      is the offset handshake trace forwarding uses.
+    * ``("reg", key, fn_bytes)`` → ``("ok",)`` | ``("err", msg)``.
+    * ``("run", key, handles, params)`` →
+      ``("ok", out_handles, t0, t1)`` | ``("err", msg)`` where t0/t1 are
+      the kernel interval on the *worker's* clock.
+    * ``("exit",)`` → worker cleans up and leaves.
+    """
+    import os
+
+    kernels: Dict[tuple, Any] = {}
+    scratch = _Scratch()
+    try:
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):  # parent died
+                break
+            cmd = msg[0]
+            if cmd == "exit":
+                conn.send(("bye",))
+                break
+            if cmd == "init":
+                conn.send(("ready", os.getpid(), time.perf_counter()))
+                continue
+            if cmd == "reg":
+                _, key, fn_bytes = msg
+                try:
+                    kernels[tuple(key)] = pickle.loads(fn_bytes)
+                    conn.send(("ok",))
+                except BaseException:
+                    conn.send(("err", traceback.format_exc()))
+                continue
+            if cmd == "run":
+                _, key, handles, params = msg
+                try:
+                    fn = kernels[tuple(key)]
+                    ins = _resolve_payloads(handles)
+                    t0 = time.perf_counter()
+                    outs = fn(ins, **params)
+                    if not isinstance(outs, tuple):
+                        outs = (outs,)
+                    outs = tuple(_to_host(o) for o in outs)
+                    t1 = time.perf_counter()
+                    scratch.reset()
+                    out_handles = [scratch.place(o) for o in outs]
+                    conn.send(("ok", out_handles, t0, t1))
+                except BaseException:
+                    conn.send(("err", traceback.format_exc()))
+                continue
+            conn.send(("err", f"unknown command {cmd!r}"))  # pragma: no cover
+    finally:
+        scratch.destroy()
+        shm_mod.detach_all()
+        try:
+            conn.close()
+        except Exception:  # pragma: no cover
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Parent side
+# ---------------------------------------------------------------------------
+
+
+class ProcessWorker:
+    """Parent handle for one PE's subprocess: pipe, clock offset, cache
+    of which kernels were already shipped."""
+
+    def __init__(self, pe_name: str, ctx: Optional[mp.context.BaseContext] = None) -> None:
+        ctx = ctx or mp.get_context("spawn")
+        self.pe_name = pe_name
+        self.conn, child = ctx.Pipe(duplex=True)
+        self.proc = ctx.Process(
+            target=worker_main, args=(child, pe_name),
+            name=f"rimms-pe-{pe_name}", daemon=True,
+        )
+        self.proc.start()
+        child.close()
+        self._sent: set = set()
+        self._scratch_names: set = set()
+        self._lock = threading.Lock()
+        # Clock-offset handshake: worker perf_counter + offset ≈ parent
+        # perf_counter (midpoint estimate; forwarded spans are clamped to
+        # the parent-observed call window anyway).
+        t_a = time.perf_counter()
+        reply = self._rpc(("init",))
+        t_b = time.perf_counter()
+        self.pid = reply[1]
+        self.clock_offset = (t_a + t_b) / 2 - reply[2]
+
+    def _rpc(self, msg: tuple) -> tuple:
+        try:
+            self.conn.send(msg)
+            reply = self.conn.recv()
+        except (EOFError, OSError, BrokenPipeError) as e:
+            self.proc.join(timeout=1.0)
+            raise WorkerDied(
+                f"PE worker {self.pe_name!r} (pid {self.proc.pid}) died "
+                f"with exit code {self.proc.exitcode} during {msg[0]!r}"
+            ) from e
+        if reply[0] == "err":
+            raise RuntimeError(
+                f"kernel error on PE worker {self.pe_name!r}:\n{reply[1]}")
+        return reply
+
+    def ensure_kernel(self, key: tuple, fn: Any) -> None:
+        if key in self._sent:
+            return
+        try:
+            fn_bytes = pickle.dumps(fn)
+        except Exception as e:
+            raise RuntimeError(
+                f"kernel {key} is not picklable ({e}); the process backend "
+                f"needs module-level kernel functions — use backend='thread' "
+                f"for closures/lambdas") from e
+        self._rpc(("reg", key, fn_bytes))
+        self._sent.add(key)
+
+    def run(self, key: tuple, ins: List[Any], params: Dict[str, Any]
+            ) -> Tuple[tuple, float, float, float, float]:
+        """Execute; returns (outputs, wall call window in parent clock
+        w0..w1, kernel interval in parent clock k0..k1)."""
+        handles: List[Tuple[str, Any]] = []
+        for v in ins:
+            h = shm_mod.describe_array(v)
+            handles.append(("shm", h) if h is not None
+                           else ("inline", np.asarray(v)))
+        with self._lock:
+            w0 = time.perf_counter()
+            reply = self._rpc(("run", key, handles, params))
+            w1 = time.perf_counter()
+            _, out_handles, t0_w, t1_w = reply
+            for kind, p in out_handles:
+                if kind == "shm":
+                    self._scratch_names.add(p[0])
+            # Copy results out of the worker's scratch before the next
+            # task reuses it (one copy; inputs were zero-copy).
+            outs = tuple(
+                np.array(shm_mod.resolve_handle(p)) if kind == "shm" else p
+                for kind, p in out_handles
+            )
+        k0 = min(max(t0_w + self.clock_offset, w0), w1)
+        k1 = min(max(t1_w + self.clock_offset, k0), w1)
+        return outs, w0, w1, k0, k1
+
+    @property
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        try:
+            self.conn.send(("exit",))
+        except (OSError, BrokenPipeError):
+            pass
+        self.proc.join(timeout=timeout)
+        if self.proc.is_alive():  # pragma: no cover - stuck worker
+            self.proc.kill()
+            self.proc.join(timeout=1.0)
+        try:
+            self.conn.close()
+        except Exception:  # pragma: no cover
+            pass
+        # A clean worker unlinks its own scratch; one that died hard
+        # leaves it registered with the (shared) resource tracker until
+        # interpreter exit.  Reap it here so worker death never leaks a
+        # segment or a shutdown warning.
+        from multiprocessing import shared_memory
+
+        for name in self._scratch_names:
+            try:
+                seg = shared_memory.SharedMemory(name=name)
+            except (FileNotFoundError, OSError):
+                continue
+            try:
+                seg.close()
+                seg.unlink()
+            except Exception:  # pragma: no cover
+                pass
+
+
+class ProcessWorkerPool:
+    """Lazy per-PE subprocess registry; thread-safe get-or-spawn."""
+
+    def __init__(self) -> None:
+        self._workers: Dict[str, ProcessWorker] = {}
+        self._lock = threading.Lock()
+        self._ctx = mp.get_context("spawn")
+        self.closed = False
+
+    def worker(self, pe_name: str) -> ProcessWorker:
+        with self._lock:
+            if self.closed:
+                raise WorkerDied("process worker pool is shut down")
+            w = self._workers.get(pe_name)
+            if w is not None and not w.alive:
+                # Died outside a call (e.g. killed externally): replace so
+                # later tasks get a live worker; the task that *observed*
+                # the death already got its WorkerDied.
+                w.shutdown(timeout=0.1)
+                w = None
+            if w is None:
+                w = ProcessWorker(pe_name, self._ctx)
+                self._workers[pe_name] = w
+            return w
+
+    def pids(self) -> Dict[str, int]:
+        with self._lock:
+            return {n: w.pid for n, w in self._workers.items()}
+
+    def procs(self) -> List[mp.Process]:
+        with self._lock:
+            return [w.proc for w in self._workers.values()]
+
+    def shutdown(self) -> None:
+        with self._lock:
+            if self.closed:
+                return
+            self.closed = True
+            workers = list(self._workers.values())
+            self._workers.clear()
+        for w in workers:
+            w.shutdown()

@@ -102,19 +102,29 @@ class ClientState:
     optional arena quota) plus the manager-owned live counters.  Mutable
     fields are guarded by the owning :class:`QoSManager`'s lock."""
 
-    __slots__ = ("name", "weight", "window", "quota_bytes",
+    __slots__ = ("name", "weight", "window", "quota_bytes", "think_s",
                  "inflight", "deficit", "admitted", "waiting")
 
     def __init__(self, name: str, *, weight: float = 1.0, window: int = 64,
-                 quota_bytes: Optional[int] = None) -> None:
+                 quota_bytes: Optional[int] = None,
+                 think_s: float = 0.0) -> None:
         if weight <= 0:
             raise ValueError(f"client weight must be > 0, got {weight}")
         if window <= 0:
             raise ValueError(f"client window must be > 0, got {window}")
+        if think_s < 0:
+            raise ValueError(f"client think_s must be >= 0, got {think_s}")
         self.name = name
         self.weight = float(weight)
         self.window = int(window)
         self.quota_bytes = quota_bytes
+        # Closed-loop think time (ISSUE 7 satellite, carried from PR 5):
+        # the modeled pause between one of this client's tasks finishing
+        # and its next submission becoming admissible.  0 = open-loop
+        # (submissions are available as fast as windows allow).  Only the
+        # deterministic replay (fair_replay) consumes it — live
+        # admission sees real submission timing.
+        self.think_s = float(think_s)
         self.inflight = 0  # admitted-but-incomplete tasks
         self.deficit = 0.0  # DRR byte credit (only while backlogged)
         self.admitted = 0  # total grants (diagnostics)
@@ -237,7 +247,8 @@ class QoSManager:
     # -- registration --------------------------------------------------------
     def client(self, name: str, *, weight: Optional[float] = None,
                window: Optional[int] = None,
-               quota_bytes: Optional[int] = None) -> ClientState:
+               quota_bytes: Optional[int] = None,
+               think_s: Optional[float] = None) -> ClientState:
         """Get-or-create the named client; passed keywords update the
         existing configuration (omitted ones are preserved)."""
         with self._cv:
@@ -248,6 +259,7 @@ class QoSManager:
                     weight=weight if weight is not None else 1.0,
                     window=window if window is not None else self.default_window,
                     quota_bytes=quota_bytes,
+                    think_s=think_s if think_s is not None else 0.0,
                 )
                 self._clients[name] = st
                 self._wheel.add(name, st.weight)
@@ -263,6 +275,10 @@ class QoSManager:
                     st.window = int(window)
                 if quota_bytes is not None:
                     st.quota_bytes = quota_bytes
+                if think_s is not None:
+                    if think_s < 0:
+                        raise ValueError("client think_s must be >= 0")
+                    st.think_s = float(think_s)
             return st
 
     def weights(self) -> Dict[str, float]:
@@ -276,7 +292,8 @@ class QoSManager:
             return {
                 "clients": {
                     n: {"weight": c.weight, "window": c.window,
-                        "quota_bytes": c.quota_bytes}
+                        "quota_bytes": c.quota_bytes,
+                        "think_s": c.think_s}
                     for n, c in self._clients.items()
                 },
                 "default_window": self.default_window,
@@ -431,7 +448,13 @@ def fair_replay(
     * execution then follows the recorded placements exactly like
       ``replay_schedule`` — per-PE busy-until, routed per-link
       contention under a topology — but a task can never start before
-      ``max(release, dependency finishes)``.
+      ``max(release, dependency finishes)``;
+    * a client configured with ``think_s > 0`` is replayed closed-loop
+      (ISSUE 7 satellite): after each of its completions the client
+      "thinks" for ``think_s`` virtual seconds before its next queued
+      submission becomes admissible, so replayed latencies match
+      closed-loop submission semantics instead of treating every
+      backlog as an open-loop burst.
 
     Every ordering key is ``(time, client name, within-client seq)``, so
     the result is byte-identical across runs and machines.  Clients are
@@ -470,6 +493,15 @@ def fair_replay(
 
     pending = {n: deque(idxs) for n, idxs in by_client.items()}
     inflight = {n: 0 for n in names}
+    # Closed-loop think time (ISSUE 7 satellite): a client with
+    # ``think_s > 0`` models a submitter who waits for a completion,
+    # "thinks", then submits again — its next pending task becomes
+    # admissible no earlier than (previous completion + think_s).  Open
+    # loop (think_s = 0, the default) keeps the original semantics:
+    # everything a window allows is admissible immediately.
+    think = {n: float(cfg.get(n, {}).get("think_s", 0.0)) for n in names}
+    next_ok = {n: 0.0 for n in names}
+    wakeups: List[Tuple[float, str]] = []  # think-time admission retries
     wheel = DrrWheel(quantum)
     for n in names:  # sorted: the replay's deterministic rotation order
         wheel.add(n, weight[n])
@@ -489,7 +521,8 @@ def fair_replay(
 
     def admit_at(t: float) -> None:
         def eligible(n: str) -> bool:
-            return bool(pending[n]) and inflight[n] < window[n]
+            return (bool(pending[n]) and inflight[n] < window[n]
+                    and next_ok[n] <= t)
 
         def head_cost(n: str) -> int:
             return admission_cost(nodes[pending[n][0]].task)
@@ -517,14 +550,25 @@ def fair_replay(
     timeline = Timeline()
     pe_free: Dict[str, float] = {pe.name: 0.0 for pe in rt.pes}
     admit_at(0.0)
-    while ready or completions:
+    while ready or completions or wakeups:
         t_r = ready[0][0] if ready else math.inf
         t_c = completions[0][0] if completions else math.inf
-        if t_c <= t_r:
+        t_w = wakeups[0][0] if wakeups else math.inf
+        if t_c <= t_r and t_c <= t_w:
             end, c, _, _ = heapq.heappop(completions)
             inflight[c] -= 1
             state["total"] -= 1
+            if think[c] > 0.0:
+                # the client observes this completion, thinks, then its
+                # next submission becomes admissible
+                next_ok[c] = max(next_ok[c], end + think[c])
+                if pending[c]:
+                    heapq.heappush(wakeups, (next_ok[c], c))
             admit_at(end)
+            continue
+        if t_w <= t_r:
+            t, _ = heapq.heappop(wakeups)
+            admit_at(t)
             continue
         ready_m, c, k, i = heapq.heappop(ready)
         node = nodes[i]

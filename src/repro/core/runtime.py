@@ -46,7 +46,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import time
+import warnings
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -57,7 +59,94 @@ from .hete import HeteContext, HeteData, MemorySpace
 from .instrument import Timeline, TimelineEvent
 from .locations import HOST, Location
 
-__all__ = ["PE", "Task", "Runtime", "make_emulated_soc", "SCHEDULERS"]
+__all__ = ["PE", "Task", "Runtime", "make_emulated_soc", "SCHEDULERS",
+           "BACKENDS", "resolve_backend", "register_platform",
+           "platform_names"]
+
+# ---------------------------------------------------------------------------
+# Execution backends (ISSUE 7) — one knob, threaded everywhere
+# ---------------------------------------------------------------------------
+
+#: valid values for the ``backend=`` knob (Session / Session.emulated /
+#: Runtime / make_emulated_soc / benchmarks).
+BACKENDS = ("thread", "process", "auto")
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    """Validate + resolve a backend name to ``"thread"`` or ``"process"``.
+
+    ``None`` means thread (the historical default).  ``"auto"`` picks the
+    process backend when real parallelism is available — more than one
+    CPU core, or more than one JAX device — and thread otherwise."""
+    if backend is None:
+        return "thread"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}: choose one of {BACKENDS}")
+    if backend == "auto":
+        if (os.cpu_count() or 1) > 1:
+            return "process"
+        try:
+            import jax
+
+            if len(jax.devices()) > 1:
+                return "process"
+        except Exception:  # pragma: no cover - jax is baked in
+            pass
+        return "thread"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Platform-preset shorthand registry (ISSUE 7 satellite, carried from PR 4)
+# ---------------------------------------------------------------------------
+
+# name -> (topology_factory(dev_locs) -> Topology | None, arena_bytes | None)
+_PLATFORMS: Dict[str, tuple] = {}
+
+
+def register_platform(name: str, topology_factory: Optional[Callable] = None,
+                      arena_bytes: Optional[int] = None, *,
+                      replace: bool = False) -> None:
+    """Register a platform preset so ``Session.emulated("name")`` (and
+    ``make_emulated_soc(topology="name")``) resolves it.
+
+    ``topology_factory(dev_locs)`` returns the
+    :class:`~repro.core.topology.Topology` for the platform's device
+    locations (``None`` keeps the scalar bandwidth model);
+    ``arena_bytes`` is the preset's default per-accelerator arena
+    capacity (callers may still override it).  Built-in presets mirror
+    :data:`repro.core.topology.PRESETS`; re-registering a name raises
+    unless ``replace=True``."""
+    _register_builtin_platforms()
+    if not replace and name in _PLATFORMS:
+        raise ValueError(f"platform {name!r} already registered "
+                         f"(pass replace=True to override)")
+    _PLATFORMS[name] = (topology_factory, arena_bytes)
+
+
+def platform_names() -> Tuple[str, ...]:
+    """Registered platform preset names (built-ins + user presets)."""
+    _register_builtin_platforms()
+    return tuple(sorted(_PLATFORMS))
+
+
+def _resolve_platform(name: str):
+    """The registry entry for ``name`` or None (fall through to the raw
+    topology presets for back-compat)."""
+    _register_builtin_platforms()
+    return _PLATFORMS.get(name)
+
+
+def _register_builtin_platforms() -> None:
+    # Lazy (first use), so importing this module never imports topology.
+    from .topology import PRESETS, build_preset
+
+    for preset in PRESETS:
+        _PLATFORMS.setdefault(
+            preset,
+            (lambda locs, _p=preset: build_preset(_p, locs), 64 << 20),
+        )
 
 SCHEDULERS = ("round_robin", "data_affinity", "heft")
 
@@ -109,11 +198,15 @@ class Runtime:
         policy: str = "rimms",
         scheduler: str = "round_robin",
         cost_model: Optional[CostModel] = None,
+        backend: Optional[str] = None,
     ) -> None:
         if policy not in ("rimms", "reference"):
             raise ValueError(f"unknown memory policy {policy!r}")
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        #: "thread" (in-process kernels) or "process" (subprocess PE
+        #: workers for host-payload PEs, ISSUE 7); "auto" resolves here.
+        self.backend = resolve_backend(backend)
         self.pes = list(pes)
         self.by_name = {pe.name: pe for pe in self.pes}
         self.context = context
@@ -130,6 +223,17 @@ class Runtime:
         # persistent per-PE worker pool, created lazily by run_graph and
         # reused across calls (ISSUE 2); close() releases it
         self._worker_pool = None
+        # per-PE subprocess workers (ISSUE 7), created lazily on the
+        # first process-dispatched kernel; close() reaps them
+        self._process_pool = None
+
+    def set_backend(self, backend: Optional[str]) -> str:
+        """Re-resolve the execution backend (e.g. a Session adopting this
+        runtime with an explicit ``backend=``).  Returns the resolved
+        name; an unknown name raises listing the valid choices."""
+        if backend is not None:
+            self.backend = resolve_backend(backend)
+        return self.backend
 
     def _get_worker_pool(self):
         from .executor import WorkerPool  # local import: avoids cycle
@@ -143,12 +247,29 @@ class Runtime:
             )
         return self._worker_pool
 
+    def _get_process_pool(self):
+        from .pworker import ProcessWorkerPool  # local import: avoids cycle
+
+        if self._process_pool is None:
+            pool = ProcessWorkerPool()
+            self._process_pool = pool
+            # reap subprocesses when this Runtime is collected
+            self._ppool_finalizer = weakref.finalize(
+                self, ProcessWorkerPool.shutdown, pool
+            )
+        return self._process_pool
+
     def close(self) -> None:
-        """Release the persistent worker pool (idempotent)."""
+        """Release the persistent worker pool and reap every PE worker
+        subprocess (idempotent)."""
         if self._worker_pool is not None:
             self._pool_finalizer.detach()
             self._worker_pool.shutdown()
             self._worker_pool = None
+        if self._process_pool is not None:
+            self._ppool_finalizer.detach()
+            self._process_pool.shutdown()
+            self._process_pool = None
 
     def reset_stats(self) -> None:
         """Clear per-run diagnostics and dispatch state: the task log,
@@ -291,9 +412,25 @@ class Runtime:
             raise
         return ins, model_s, ctx.take_spill_seconds(), moves
 
+    def _proc_eligible(self, pe: PE) -> bool:
+        """Whether ``pe``'s kernels may execute in a subprocess worker:
+        its memory space must hold host-format payloads (see
+        :attr:`~repro.core.hete.MemorySpace.proc_exec`) — PEs bound to a
+        real JAX device keep in-process async dispatch."""
+        space = self.context.spaces.get(pe.location)
+        return space is not None and getattr(space, "proc_exec", False)
+
     def _run_kernel(self, task: Task, pe: PE, ins: List[Any]) -> Tuple[tuple, float]:
         """Execute the kernel; returns (outputs, measured seconds).  Blocks
-        async (JAX) dispatch so timings feed the cost model honestly."""
+        async (JAX) dispatch so timings feed the cost model honestly.
+
+        Backend dispatch (ISSUE 7): under ``backend="process"`` the call
+        runs on ``pe``'s subprocess worker — shared-memory inputs map
+        zero-copy, the parent thread blocks GIL-free on the reply — for
+        every PE whose space holds host payloads; other PEs (real JAX
+        devices) execute in-process as before."""
+        if self.backend == "process" and self._proc_eligible(pe):
+            return self._run_kernel_process(task, pe, ins)
         fn = self._kernels[(task.op, pe.kind)]
         t0 = time.perf_counter()
         outs = _as_tuple(fn(ins, **task.params))
@@ -305,6 +442,29 @@ class Runtime:
                 pass
         dt = time.perf_counter() - t0
         self.cost_model.observe(task.op, pe.kind, task.in_bytes, dt)
+        return outs, dt
+
+    def _run_kernel_process(self, task: Task, pe: PE,
+                            ins: List[Any]) -> Tuple[tuple, float]:
+        """Process-backend kernel call: ship handles to ``pe``'s worker,
+        forward the worker-measured compute span onto the trace (on the
+        ``pe:{name}:worker`` track, clock-offset corrected and clamped to
+        the parent-observed call window)."""
+        key = (task.op, pe.kind)
+        fn = self._kernels[key]
+        worker = self._get_process_pool().worker(pe.name)
+        worker.ensure_kernel(key, fn)
+        outs, w0, w1, k0, k1 = worker.run(key, ins, task.params)
+        dt = w1 - w0
+        self.cost_model.observe(task.op, pe.kind, task.in_bytes, dt)
+        tracer = self.context.tracer
+        if tracer is not None:
+            tracer.forward_span(
+                task.name or task.op, "compute", f"pe:{pe.name}:worker",
+                k0, k1, lo=w0, hi=w1,
+                args={"op": task.op, "backend": "process",
+                      "worker_pid": worker.pid},
+            )
         return outs, dt
 
     def _commit_outputs(self, task: Task, pe: PE, outs: tuple) -> Tuple[float, float]:
@@ -361,10 +521,19 @@ class Runtime:
         serialization).  Returns wall seconds; fills :attr:`timeline` and
         :attr:`last_makespan_model` for comparison against graph mode.
 
-        Compat wrapper: new code should prefer the streaming session API
-        (:class:`repro.core.api.Session`); this remains the reference
-        serial dispatch every equivalence/copy-count claim compares
-        against."""
+        .. deprecated:: ISSUE 7
+           Compat wrapper — prefer the streaming session API
+           (:class:`repro.core.api.Session`).  Emits one
+           :class:`DeprecationWarning` per process; internal callers
+           (the session, benchmarks' serial baselines) use
+           :meth:`_run_impl` directly, so the warning always points at
+           user code."""
+        _warn_deprecated("run")
+        return self._run_impl(tasks)
+
+    def _run_impl(self, tasks: Sequence[Task]) -> float:
+        """Serial dispatch body — the reference every equivalence/
+        copy-count claim compares against (no deprecation warning)."""
         self.reset_stats()
         topo = getattr(self.context.ledger.bandwidth_model, "topology", None)
         if topo is not None:
@@ -440,10 +609,25 @@ class Runtime:
         Returns wall seconds; :attr:`timeline`, :attr:`last_makespan_model`
         and :attr:`last_report` carry the schedule evidence.
 
-        Compat wrapper: batch intake over the same worker pool the
-        streaming session API (:class:`repro.core.api.Session`) drives
-        continuously — prefer the session for new code.
+        .. deprecated:: ISSUE 7
+           Compat wrapper — prefer the streaming session API
+           (:class:`repro.core.api.Session`), which drives the same
+           worker pool continuously.  Emits one
+           :class:`DeprecationWarning` per process; internal callers use
+           :meth:`_run_graph_impl`.
         """
+        _warn_deprecated("run_graph")
+        return self._run_graph_impl(tasks, scheduler=scheduler,
+                                    prefetch=prefetch)
+
+    def _run_graph_impl(
+        self,
+        tasks: Sequence[Task],
+        *,
+        scheduler: Optional[str] = None,
+        prefetch: bool = True,
+    ) -> float:
+        """Batch graph-executor body (no deprecation warning)."""
         from .executor import GraphExecutor  # local import: avoids cycle
 
         self.reset_stats()
@@ -455,6 +639,26 @@ class Runtime:
 
 def _as_tuple(x: Any) -> tuple:
     return x if isinstance(x, tuple) else (x,)
+
+
+# One DeprecationWarning per process (ISSUE 7 satellite): the first
+# Runtime.run / run_graph call warns, later ones stay quiet so batch
+# loops don't flood stderr.
+_deprecation_warned = False
+
+
+def _warn_deprecated(which: str) -> None:
+    global _deprecation_warned
+    if _deprecation_warned:
+        return
+    _deprecation_warned = True
+    warnings.warn(
+        f"Runtime.{which}() is a compat wrapper and is deprecated; use the "
+        f"streaming session API instead (repro.core.api.Session / "
+        f"Session.emulated — see the README migration table).",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -474,6 +678,8 @@ def make_emulated_soc(
     context: Optional[HeteContext] = None,
     tracking: str = "flag",
     topology=None,
+    backend: Optional[str] = None,
+    host_arena_bytes: Optional[int] = None,
 ) -> tuple:
     """Build (runtime-ready PEs, HeteContext) for an emulated SoC.
 
@@ -486,20 +692,36 @@ def make_emulated_soc(
     scenarios need a roomy neighbour).
 
     ``topology`` opts into routed, contention-aware transfer modeling
-    (ISSUE 3): a preset name from :data:`repro.core.topology.PRESETS`
-    ("emulated_soc", "pcie_tree", "nvlink_mesh", "host_bridged_fpga"), a
+    (ISSUE 3): a platform name from :func:`platform_names` (built-ins
+    "emulated_soc", "pcie_tree", "nvlink_mesh", "host_bridged_fpga", plus
+    anything the embedding app added via :func:`register_platform`), a
     :class:`~repro.core.topology.Topology`, or a ready
     :class:`~repro.core.topology.TopologyBandwidthModel`.  It replaces
     the context ledger's scalar bandwidth model; ``None`` (the default)
     keeps the scalar model, so existing baselines hold.
+
+    ``backend`` (ISSUE 7): ``"thread"`` (default) keeps in-process
+    kernels over per-device jax payloads.  ``"process"`` builds the SoC
+    for subprocess PE workers: host buffers come from a
+    :class:`~repro.core.shm.SharedHostArena` (``host_arena_bytes``
+    capacity) that workers map zero-copy, and emulated accelerator
+    spaces hold host-format numpy payloads (their arenas — capacity,
+    eviction, the whole ledger — stay modeled exactly as before).  When
+    ``jax.devices()`` exposes more than one real device, accelerators
+    are spread round-robin across them and keep in-process async
+    dispatch (real device parallelism beats a worker pipe).
     """
     import jax
 
+    backend = resolve_backend(backend)
     ctx = context or HeteContext(tracking=tracking)
-    device = jax.devices()[0]
+    devices = jax.devices()
+    multi_device = len(devices) > 1
+    if backend == "process" and ctx.host_arena is None:
+        from .shm import SharedHostArena, default_arena_bytes
 
-    def _ingest(host_value: np.ndarray):
-        return jax.device_put(host_value, device)
+        ctx.attach_host_arena(SharedHostArena(
+            host_arena_bytes or default_arena_bytes()))
 
     def _egress(value) -> np.ndarray:
         return np.asarray(value)
@@ -513,7 +735,7 @@ def make_emulated_soc(
     default_ops = {"fft_acc": ("fft", "ifft"), "zip_acc": ("zip",),
                    "gpu": ("fft", "ifft", "zip", "generic")}
     dev_locs: List[Location] = []
-    for name in accelerators:
+    for idx, name in enumerate(accelerators):
         kind = next((k for k in default_ops if name.startswith(k)), "acc")
         ops = tuple((acc_ops or {}).get(name, default_ops.get(kind, ())))
         loc = Location("device", name)
@@ -522,14 +744,25 @@ def make_emulated_soc(
             arena_bytes.get(name, 64 << 20)
             if isinstance(arena_bytes, dict) else arena_bytes
         )
+        if backend == "process" and not multi_device:
+            # Subprocess workers execute this PE's kernels: device copies
+            # are host-format (distinct shared-memory buffers — the
+            # host→device copy is real, the arena stays modeled).
+            ingest = ctx.host_copy
+            proc_exec = True
+        else:
+            device = devices[idx % len(devices)]
+            ingest = (lambda v, _d=device: jax.device_put(v, _d))
+            proc_exec = False
         ctx.register_space(
             MemorySpace(
                 loc,
                 capacity=capacity,
                 allocator=allocator,
                 block_size=block_size,
-                ingest=_ingest,
+                ingest=ingest,
                 egress=_egress,
+                proc_exec=proc_exec,
             )
         )
         pes.append(PE(name, "gpu" if kind == "gpu" else "acc", loc, frozenset(ops)))
@@ -538,7 +771,11 @@ def make_emulated_soc(
         from .topology import Topology, TopologyBandwidthModel, build_preset
 
         if isinstance(topology, str):
-            topology = build_preset(topology, dev_locs)
+            entry = _resolve_platform(topology)
+            if entry is not None and entry[0] is not None:
+                topology = entry[0](dev_locs)
+            else:
+                topology = build_preset(topology, dev_locs)
         if isinstance(topology, Topology):
             topology = TopologyBandwidthModel(topology)
         ctx.ledger.bandwidth_model = topology

@@ -148,6 +148,30 @@ class TraceCollector:
         else:
             r.drops += 1
 
+    def forward_span(
+        self,
+        name: str,
+        cat: str,
+        track: str,
+        t0: float,
+        t1: float,
+        *,
+        lo: float,
+        hi: float,
+        args: Optional[dict] = None,
+    ) -> None:
+        """Record a span measured on *another process's* clock (ISSUE 7).
+
+        ``t0``/``t1`` are the worker's interval already shifted into this
+        process's ``perf_counter`` timebase by the caller's clock-offset
+        handshake; ``lo``/``hi`` bound it to the parent-observed call
+        window, so handshake drift can never produce a span that starts
+        before its dispatch or ends after its reply — which would violate
+        the exclusive-track invariants :func:`trace_lint` checks."""
+        t0 = min(max(t0, lo), hi)
+        t1 = min(max(t1, t0), hi)
+        self.span(name, cat, track, t0, t1, args)
+
     def now(self) -> float:
         """perf_counter() — the clock spans must be stamped with."""
         return time.perf_counter()
