@@ -162,13 +162,16 @@ def main() -> None:
                     help="kernel-execution backend for the graph case")
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="export + lint a Perfetto trace of the run")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="write a METRICS_*.json divergence table "
+                         "(requires --trace-dir)")
     args = ap.parse_args()
     backend = resolve_backend(args.backend)
     print("name,us_per_call,derived")
     from .common import tracing
 
     trace_name = "graph" if backend == "thread" else f"graph_{backend}"
-    with tracing(args.trace_dir, trace_name):
+    with tracing(args.trace_dir, trace_name, metrics_dir=args.metrics_dir):
         if args.smoke:
             smoke(args.json or None, backend=backend)
         else:

@@ -53,6 +53,14 @@ LIGHT_WINDOW = 4  # one chain in flight: the closed-loop pacing
 HEAVY_WINDOW = 4
 HEAVY_WEIGHT = 0.25
 GLOBAL_WINDOW = 12  # the shared admission budget the DRR weights split
+# Latency SLOs (ISSUE 8): the lights declare a loose objective no
+# modeled latency can violate; the heavy tenant declares one below the
+# 20us modeled launch floor, so every task violates it — the benchmark
+# deterministically exercises both the clean and the breached paths of
+# the burn-rate monitor.
+LIGHT_SLO_LATENCY_S = 60.0
+HEAVY_SLO_LATENCY_S = 10e-6
+SLO_TARGET = 0.99
 
 
 def _chain_seed(client: int, chain: int) -> int:
@@ -77,9 +85,13 @@ def _tenant_case(*, n: int, light_chains: int, heavy_chains: int,
                            global_window=global_window)
     light_names = [f"light{c}" for c in range(N_LIGHTS)]
     for name in light_names:
-        session.client(name, weight=1.0, window=LIGHT_WINDOW)
+        session.client(name, weight=1.0, window=LIGHT_WINDOW,
+                       slo_latency_s=LIGHT_SLO_LATENCY_S,
+                       slo_target=SLO_TARGET)
     if include_heavy:
-        session.client("heavy", weight=heavy_weight, window=heavy_window)
+        session.client("heavy", weight=heavy_weight, window=heavy_window,
+                       slo_latency_s=HEAVY_SLO_LATENCY_S,
+                       slo_target=SLO_TARGET)
 
     outs: dict = {}
     nodes: dict = {}
@@ -132,8 +144,11 @@ def _tenant_case(*, n: int, light_chains: int, heavy_chains: int,
     fairness = session.ledger.fairness_report(clients=light_names)
     snap = session.ledger.snapshot()
     session.close()
+    divergence = session.runtime.divergence.table()
     session.runtime.close()
     return {
+        "slo": qrep["slo"],
+        "divergence": divergence,
         "wall_s": rep["wall_s"],
         "makespan_model": qrep["makespan_model"],
         "n_tasks": rep["n_tasks"],
@@ -195,7 +210,7 @@ def run_multitenant(*, n: int, light_chains: int, heavy_chains: int,
         f"x_solo={ratio_unbounded:.2f}",
     )
 
-    strip = ("_out", "_lat")
+    strip = ("_out", "_lat", "divergence")
     rec = {
         "bench": "multitenant",
         "params": {
@@ -213,6 +228,10 @@ def run_multitenant(*, n: int, light_chains: int, heavy_chains: int,
         "light_p95_over_solo": ratio,
         "light_p95_over_solo_unbounded": ratio_unbounded,
         "bit_identical": bool(identical),
+        # Wall/modeled calibration table + per-tenant SLO burn rates
+        # from the mix case (ISSUE 8).
+        "divergence": mix["divergence"],
+        "slo": mix["slo"],
         # Regression-gated metrics: all from the deterministic QoS
         # replay (virtual admission + modeled execution), so they are
         # exact across runs and machines.
@@ -228,6 +247,16 @@ def run_multitenant(*, n: int, light_chains: int, heavy_chains: int,
     }
 
     if smoke:
+        # SLO burn rates (ISSUE 8): the lights' loose objective is never
+        # violated; the heavy tenant's sub-launch-floor objective is
+        # violated by every task — both deterministic, from the replay.
+        slo = mix["slo"]
+        for c in range(N_LIGHTS):
+            s = slo[f"light{c}"]
+            assert s["violations"] == 0 and not s["breached"], (c, s)
+        hs = slo["heavy"]
+        assert hs["violations"] == hs["tasks"] > 0, hs
+        assert hs["breached"] and hs["burn_rate"] > 1.0, hs
         # Per-client histogram percentiles (ISSUE 6): every tenant must
         # report ordered, positive per-task modeled latency quantiles,
         # with one sample per task it completed.
@@ -287,6 +316,9 @@ def main() -> None:
     ap.add_argument("--heavy-chains", type=int, default=None)
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="export + lint a Perfetto trace of the run")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="write a METRICS_*.json divergence table "
+                         "(requires --trace-dir)")
     args = ap.parse_args()
     n = args.n or (1 << 12 if args.smoke else N)
     light_chains = args.light_chains or (4 if args.smoke else LIGHT_CHAINS)
@@ -294,7 +326,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from .common import tracing
 
-    with tracing(args.trace_dir, "multitenant"):
+    with tracing(args.trace_dir, "multitenant", metrics_dir=args.metrics_dir):
         run_multitenant(n=n, light_chains=light_chains,
                         heavy_chains=heavy_chains,
                         json_path=args.json or None, smoke=args.smoke)

@@ -21,6 +21,12 @@ build without tracing, which is the repo's analogue of the paper's
 1–2-cycles-per-call claim.  The raw event-record cost (``instant()``
 ns/event, enabled vs paused) is reported alongside.
 
+A fourth configuration (ISSUE 8) runs the same flag-hit loop on a live
+session while the background **telemetry sampler** ticks every 1 ms:
+the sampler reads occupancy/arena/link/tenant gauges from its own
+thread and must leave the hot path alone — gated at the same ≤ 1.30×
+its own sampler-off baseline under ``--smoke``.
+
 Run:  PYTHONPATH=src python -m benchmarks.bench_overhead [--smoke]
 """
 
@@ -76,6 +82,30 @@ def _bench_flag_check(n_calls: int) -> dict:
     return out
 
 
+def _bench_flag_check_sampled(n_calls: int) -> dict:
+    """Flag-check medians on a live session, sampler off vs running
+    (1 ms period).  The sampler reads from its own thread; the flag-hit
+    path carries zero sampler instrumentation, so on ≈ off."""
+    from repro.core.api import Session
+
+    session = Session.emulated(n_cpu=1, accelerators=("gpu0",))
+    ctx = session.context
+    hd = ctx.malloc((1024,), np.float32)
+    off, on = [], []
+    _flag_loop_ns(ctx, hd, n_calls)  # warmup
+    for _ in range(REPEATS):
+        off.append(_flag_loop_ns(ctx, hd, n_calls))
+        sampler = session.start_sampler(period=1e-3)
+        on.append(_flag_loop_ns(ctx, hd, n_calls))
+        sampler.stop()
+        session.sampler = None  # a stopped sampler stays stopped
+    n_samples = sampler.ticks
+    session.close()
+    session.runtime.close()
+    return {"off": _median(off), "on": _median(on),
+            "last_run_samples": n_samples}
+
+
 def _bench_instant(n_events: int) -> dict:
     """Raw event-record cost: instant() ns/event, enabled vs paused."""
     from repro.core.trace import TraceCollector
@@ -98,10 +128,12 @@ def _bench_instant(n_events: int) -> dict:
 def run(n_calls: int = 1_000_000, *, smoke: bool = False) -> dict:
     flag = _bench_flag_check(n_calls)
     inst = _bench_instant(min(n_calls, 50_000))
+    samp = _bench_flag_check_sampled(min(n_calls, 100_000))
     ns = flag["baseline"]
     cycles_1p2ghz = ns * 1.2
     ratio_traced = flag["traced"] / ns
     ratio_paused = flag["paused"] / ns
+    ratio_sampled = samp["on"] / samp["off"]
     emit(
         "sec522_flag_check", ns / 1e3,
         f"ns_per_call={ns:.1f};cycles@1.2GHz={cycles_1p2ghz:.1f};"
@@ -123,6 +155,11 @@ def run(n_calls: int = 1_000_000, *, smoke: bool = False) -> dict:
         "trace_instant_paused", inst["paused"] / 1e3,
         f"ns_per_event={inst['paused']:.1f}",
     )
+    emit(
+        "sampler_flag_check", samp["on"] / 1e3,
+        f"ns_per_call={samp['on']:.1f};x_off={ratio_sampled:.3f};"
+        f"samples={samp['last_run_samples']}",
+    )
     if smoke:
         assert ratio_traced <= SMOKE_RATIO, (
             f"tracing-enabled flag check {ratio_traced:.2f}x baseline "
@@ -133,11 +170,18 @@ def run(n_calls: int = 1_000_000, *, smoke: bool = False) -> dict:
             f"tracing-paused flag check {ratio_paused:.2f}x baseline "
             f"(gate: <={SMOKE_RATIO}x)"
         )
+        assert ratio_sampled <= SMOKE_RATIO, (
+            f"sampler-enabled flag check {ratio_sampled:.2f}x its "
+            f"sampler-off baseline (gate: <={SMOKE_RATIO}x — the sampler "
+            f"must stay off the hot path)"
+        )
         print(f"overhead smoke: OK (traced {ratio_traced:.2f}x, paused "
-              f"{ratio_paused:.2f}x baseline of {ns:.0f} ns/call)",
+              f"{ratio_paused:.2f}x baseline of {ns:.0f} ns/call, "
+              f"sampled {ratio_sampled:.2f}x)",
               flush=True)
-    return {"flag": flag, "instant": inst,
-            "ratio_traced": ratio_traced, "ratio_paused": ratio_paused}
+    return {"flag": flag, "instant": inst, "sampled": samp,
+            "ratio_traced": ratio_traced, "ratio_paused": ratio_paused,
+            "ratio_sampled": ratio_sampled}
 
 
 def main() -> None:

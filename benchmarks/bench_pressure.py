@@ -143,13 +143,16 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="export + lint a Perfetto trace of the run")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="write a METRICS_*.json divergence table "
+                         "(requires --trace-dir)")
     args = ap.parse_args()
     ways = args.ways or (4 if args.smoke else WAYS)
     n = args.n or (1 << 12 if args.smoke else N)
     print("name,us_per_call,derived")
     from .common import tracing
 
-    with tracing(args.trace_dir, "pressure"):
+    with tracing(args.trace_dir, "pressure", metrics_dir=args.metrics_dir):
         run_pressure(ways=ways, n=n, json_path=args.json or None,
                      smoke=args.smoke)
 

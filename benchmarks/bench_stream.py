@@ -122,8 +122,10 @@ def _stream_case(*, clients: int, chains: int, n: int, accelerators,
     snap = session.ledger.snapshot()
     out = np.stack([np.stack(outs[c]) for c in range(clients)])
     session.close()
+    divergence = session.runtime.divergence.table()
     session.runtime.close()
     return {
+        "divergence": divergence,
         "wall_s": rep["wall_s"],
         # submit→drain window only (excludes session startup + warmup;
         # rep["wall_s"] counts from executor construction)
@@ -241,7 +243,10 @@ def run_stream(*, clients: int, chains: int, n: int, json_path, smoke,
         "params": {"clients": clients, "chains": chains, "n": n,
                    "accelerators": list(accs)},
         "stream": {k: v for k, v in stream.items()
-                   if k not in ("_out", "by_pair")},
+                   if k not in ("_out", "by_pair", "divergence")},
+        # Wall/modeled calibration table from the stream case (ISSUE 8):
+        # one cell per (span kind, op, PE kind, shape bucket).
+        "divergence": stream["divergence"],
         "batch_graph": {k: v for k, v in batch.items()
                         if k not in ("_out", "by_pair")},
         "serial": {k: v for k, v in serial.items()
@@ -284,6 +289,17 @@ def run_stream(*, clients: int, chains: int, n: int, json_path, smoke,
         )
 
     if smoke:
+        import math
+
+        compute_ratios = [
+            c["ema_ratio"] for c in stream["divergence"].values()
+            if c["kind"] == "compute" and c["count"] > 0
+        ]
+        assert any(r is not None and r > 0 and math.isfinite(r)
+                   for r in compute_ratios), (
+            f"divergence table has no (op, PE kind) compute cell with a "
+            f"finite positive wall/modeled ratio: {stream['divergence']}"
+        )
         assert identical, "streamed outputs differ from batch run_graph"
         assert copies_match, (
             f"stream copy counts differ from batch run_graph: "
@@ -336,6 +352,9 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="export + lint a Perfetto trace of the run")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="write a METRICS_*.json divergence table "
+                         "(requires --trace-dir)")
     args = ap.parse_args()
     backend = resolve_backend(args.backend)
     clients = args.clients or (4 if args.smoke else CLIENTS)
@@ -348,7 +367,7 @@ def main() -> None:
     from .common import tracing
 
     trace_name = "stream" if backend == "thread" else f"stream_{backend}"
-    with tracing(args.trace_dir, trace_name):
+    with tracing(args.trace_dir, trace_name, metrics_dir=args.metrics_dir):
         run_stream(clients=clients, chains=chains, n=n,
                    json_path=args.json or None, smoke=args.smoke,
                    backend=backend)

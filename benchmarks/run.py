@@ -24,6 +24,10 @@ def main() -> None:
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="export + lint a Perfetto TRACE_*.json per "
                          "benchmark into DIR (ISSUE 6)")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="write METRICS_*.json (wall/modeled divergence "
+                         "tables) per benchmark into DIR (ISSUE 8; "
+                         "requires --trace-dir)")
     args = ap.parse_args()
     from . import (bench_2fft, bench_2fzf, bench_3zip, bench_alloc,
                    bench_apps, bench_graph, bench_marking,
@@ -79,7 +83,7 @@ def main() -> None:
         print(f"# --- {name} ---", flush=True)
         jp = (str(json_dir / json_names[name])
               if json_dir and name in json_names else None)
-        with tracing(args.trace_dir, name):
+        with tracing(args.trace_dir, name, metrics_dir=args.metrics_dir):
             fn(jp)
 
 

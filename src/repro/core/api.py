@@ -73,13 +73,14 @@ from .qos import DEFAULT_CLIENT, BackpressureFull, QoSManager, admission_cost
 from .runtime import (BACKENDS, Runtime, Task,  # noqa: F401
                       make_emulated_soc, platform_names, register_platform,
                       resolve_backend)
+from .telemetry import Sampler, metrics_text, serve_metrics, slo_eval
 from .trace import (MetricsRegistry, TraceCollector, trace,  # noqa: F401
                     trace_lint)
 
 __all__ = ["OpRegistry", "op", "default_registry", "BufferFuture",
            "Session", "SessionClient", "SessionClosedError",
-           "TraceCollector", "MetricsRegistry", "trace", "trace_lint",
-           "BACKENDS", "resolve_backend", "register_platform",
+           "TraceCollector", "MetricsRegistry", "Sampler", "trace",
+           "trace_lint", "BACKENDS", "resolve_backend", "register_platform",
            "platform_names"]
 
 
@@ -329,6 +330,7 @@ class Session:
         global_window: Optional[int] = None,
         trace: Union[bool, TraceCollector, None] = None,
         backend: Optional[str] = None,
+        sampler_period: Optional[float] = None,
     ) -> None:
         self.runtime = runtime
         # Execution backend (ISSUE 7): None adopts the runtime's;
@@ -373,6 +375,12 @@ class Session:
         # that stream completion iterates: one reentrant lock serializes
         # both (admit() re-enters it).
         self._sublock = self._stream.state_lock
+        # Background telemetry sampler (ISSUE 8): off by default;
+        # ``sampler_period=0.0`` builds a manual-tick sampler without a
+        # thread, > 0 starts the periodic background thread.
+        self.sampler: Optional[Sampler] = None
+        if sampler_period is not None:
+            self.start_sampler(period=sampler_period)
 
     @classmethod
     def emulated(
@@ -391,6 +399,7 @@ class Session:
         global_window: Optional[int] = None,
         trace: Union[bool, TraceCollector, None] = None,
         backend: Optional[str] = None,
+        sampler_period: Optional[float] = None,
         **soc_kwargs: Any,
     ) -> "Session":
         """Session over a fresh emulated SoC (see
@@ -428,26 +437,36 @@ class Session:
                      backend=backend)
         return cls(rt, prefetch=prefetch, window=window, registry=registry,
                    qos=qos, client_window=client_window,
-                   global_window=global_window, trace=trace)
+                   global_window=global_window, trace=trace,
+                   sampler_period=sampler_period)
 
     # -- tenants (ISSUE 5) ---------------------------------------------------
     def client(self, name: Optional[str] = None, *,
                weight: Optional[float] = None,
                window: Optional[int] = None,
                quota_bytes: Optional[int] = None,
-               think_s: Optional[float] = None) -> SessionClient:
+               think_s: Optional[float] = None,
+               slo_latency_s: Optional[float] = None,
+               slo_target: Optional[float] = None) -> SessionClient:
         """A named tenant handle: its submissions run under ``weight``
         (DRR admission share), a bounded in-flight ``window``
         (backpressure), and an optional per-device-arena reservation
         ``quota_bytes``.  ``think_s`` declares the client's closed-loop
         think time so the deterministic QoS replay (``qos_report``)
-        models its pacing instead of an open-loop burst.  Calling again
-        with the same name updates the passed settings and returns a
-        handle to the same client."""
+        models its pacing instead of an open-loop burst.
+        ``slo_latency_s`` declares a latency objective (ISSUE 8): tasks
+        finishing later than it in the deterministic replay count as
+        violations, ``qos_report()["slo"]`` reports the burn rate
+        against ``slo_target`` (default 0.99), and violations emit
+        ``slo_violation`` instants into the trace.  Calling again with
+        the same name updates the passed settings and returns a handle
+        to the same client."""
         if name is None:
             name = f"client{next(self._client_seq)}"
         state = self.qos.client(name, weight=weight, window=window,
-                                quota_bytes=quota_bytes, think_s=think_s)
+                                quota_bytes=quota_bytes, think_s=think_s,
+                                slo_latency_s=slo_latency_s,
+                                slo_target=slo_target)
         if quota_bytes is not None:
             self.context.set_quota(name, quota_bytes)
         return SessionClient(self, state)
@@ -704,11 +723,29 @@ class Session:
     def close(self) -> None:
         """Drain the stream and stop accepting submissions (idempotent).
         The runtime and its worker pool stay usable — call
-        :meth:`Runtime.close` to release the threads."""
+        :meth:`Runtime.close` to release the threads.  On close the
+        session also merges process-worker metrics into
+        :attr:`metrics`, stops the telemetry sampler, and pushes the
+        modeled track group (+ divergence table, SLO instants) into the
+        tracer."""
         if not self.closed:
             self.closed = True
             self._stream.close()
+            self._collect_worker_metrics()
+            if self.sampler is not None:
+                self.sampler.stop()
             self._push_trace()
+
+    def _collect_worker_metrics(self) -> None:
+        """Drain process-backend workers' local counters/histograms into
+        this session's registry (ISSUE 8).  Dead or mid-restart workers
+        are skipped — metric loss is acceptable, a hung close is not."""
+        pool = getattr(self.runtime, "_process_pool", None)
+        if pool is not None:
+            try:
+                pool.collect_metrics(self.metrics)
+            except Exception:
+                pass
 
     def _push_trace(self) -> None:
         """Derive the stream's modeled track group into the tracer —
@@ -731,6 +768,50 @@ class Session:
              for i, end in sorted(finish.items())],
             run,
         )
+        tracer.set_divergence(self.runtime.divergence.table())
+        # SLO alert instants (ISSUE 8): one per violating task, at its
+        # modeled finish time on the owning tenant's track.
+        slo_of = {name: cfg["slo_latency_s"]
+                  for name, cfg in self.qos.params()["clients"].items()
+                  if cfg.get("slo_latency_s") is not None}
+        for i, end in sorted(finish.items()):
+            client = nodes[i].task.client or DEFAULT_CLIENT
+            objective = slo_of.get(client)
+            if objective is None:
+                continue
+            latency = end - release[i]
+            if latency > objective:
+                tracer.add_model_instant(
+                    "slo_violation", "slo", f"{run}/tenant:{client}", end,
+                    args={"task": nodes[i].name, "node": i,
+                          "latency_s": latency, "objective_s": objective})
+
+    # -- telemetry (ISSUE 8) -------------------------------------------------
+    def start_sampler(self, *, period: float = 0.0,
+                      max_samples: int = 4096) -> Sampler:
+        """Attach (and start, when ``period > 0``) the background
+        telemetry sampler: per-PE occupancy and queue depth, arena
+        bytes, pressure counters, link busy fractions, and per-tenant
+        window/DRR gauges recorded into :attr:`metrics` on every tick.
+        ``period=0`` builds a manual-tick sampler (``sampler.tick()``),
+        for deterministic tests.  Idempotent; returns the sampler."""
+        if self.sampler is None:
+            self.sampler = Sampler(self, period=period,
+                                   max_samples=max_samples)
+        self.sampler.start()
+        return self.sampler
+
+    def metrics_text(self) -> str:
+        """This session's metrics in Prometheus text exposition format
+        (version 0.0.4) — counters, gauges, and histogram summaries."""
+        return metrics_text(self.metrics)
+
+    def serve_metrics(self, *, host: str = "127.0.0.1", port: int = 0):
+        """Serve :meth:`metrics_text` over a localhost HTTP endpoint
+        (``GET /metrics``).  Returns a :class:`MetricsServer`; call
+        ``.close()`` when done.  ``port=0`` picks a free port —
+        ``server.url`` has the bound address."""
+        return serve_metrics(self.metrics_text, host=host, port=port)
 
     def export_trace(self, path=None) -> Dict[str, Any]:
         """Export the session's trace as a Perfetto-loadable dict (JSON
@@ -796,9 +877,11 @@ class Session:
         # and the replay is a full re-simulation each time — recording
         # into self.metrics would double-count latencies.
         reg = MetricsRegistry()
+        lat_by_client: Dict[str, List[float]] = {}
         for i, end in finish.items():
-            reg.histogram(f"latency_model_s/{client_of[i]}").record(
-                end - release[i])
+            latency = end - release[i]
+            reg.histogram(f"latency_model_s/{client_of[i]}").record(latency)
+            lat_by_client.setdefault(client_of[i], []).append(latency)
         percentiles: Dict[str, Dict[str, float]] = {}
         for name, hist in reg.histograms():
             percentiles[name.split("/", 1)[1]] = {
@@ -808,13 +891,26 @@ class Session:
                 "mean": hist.mean,
                 "count": hist.count,
             }
+        # SLO burn rates (ISSUE 8): evaluated over the same deterministic
+        # replay latencies — burn > 1 means the error budget is being
+        # spent faster than the objective allows.
+        qos_params = self.qos.params()
+        slo: Dict[str, Dict[str, Any]] = {}
+        for name, cfg in qos_params["clients"].items():
+            if cfg.get("slo_latency_s") is None:
+                continue
+            slo[name] = slo_eval(lat_by_client.get(name, []),
+                                 cfg["slo_latency_s"],
+                                 cfg.get("slo_target") or 0.99)
         return {
             "makespan_model": makespan,
             "timeline": timeline,
             "finish_model": finish,
             "release_model": release,
-            "qos": self.qos.params(),
+            "qos": qos_params,
             "fairness": self.fairness_report(),
             "latency_percentiles": percentiles,
             "metrics": self.metrics.snapshot(),
+            "divergence": self.runtime.divergence.table(),
+            "slo": slo,
         }

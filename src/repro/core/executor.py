@@ -123,6 +123,11 @@ class WorkerPool:
         self.queues: Dict[str, "queue.Queue"] = {
             pe.name: queue.Queue() for pe in pes
         }
+        # Per-PE busy flags (ISSUE 8): set by the worker loop around each
+        # payload so the telemetry sampler can read occupancy without
+        # touching the queues.  Plain dict writes — sampling tolerates a
+        # stale read; the hot path takes no lock.
+        self.active: Dict[str, bool] = {pe.name: False for pe in pes}
         self.transfer = ThreadPoolExecutor(
             max_workers=max(2, len(pes)), thread_name_prefix="rimms-xfer",
         )
@@ -147,7 +152,11 @@ class WorkerPool:
             if item is _SHUTDOWN:
                 return
             run, payload = item
-            run._process(pe, payload)
+            self.active[pe.name] = True
+            try:
+                run._process(pe, payload)
+            finally:
+                self.active[pe.name] = False
 
     def drain(self, run) -> list:
         """Pop every queued payload belonging to ``run`` (run teardown;
@@ -225,14 +234,16 @@ def _execute_task(rt: "Runtime", task: "Task", pe: "PE",
             staged = (staged[0], staged[1] + pre[0][1],
                       staged[2] + pre[0][2], pre[0][3] + staged[3])
     ins, tr_s, sp_s, moves = staged
-    w_staged = time.perf_counter() if tracer is not None else w0
+    w_staged = time.perf_counter()
     try:
         outs, comp_s = rt._run_kernel(task, pe, ins)
-        w_comp = time.perf_counter() if tracer is not None else w_staged
+        w_comp = time.perf_counter()
         out_s, sp2_s = rt._commit_outputs(task, pe, outs)
     finally:
         rt._unpin_inputs(task, pe.location)
     w1 = time.perf_counter()
+    rt.divergence.observe("stage", task.op, pe.kind, task.in_bytes,
+                          w_staged - w0, tr_s + sp_s)
     if tracer is not None:
         tname = task.name or task.op
         targs = {"task": tname, "op": task.op, "client": task.client}

@@ -36,6 +36,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from . import shm as shm_mod
+from .trace import MetricsRegistry
 
 __all__ = ["WorkerDied", "ProcessWorker", "ProcessWorkerPool", "worker_main"]
 
@@ -135,12 +136,18 @@ def worker_main(conn, pe_name: str) -> None:
     * ``("run", key, handles, params)`` →
       ``("ok", out_handles, t0, t1)`` | ``("err", msg)`` where t0/t1 are
       the kernel interval on the *worker's* clock.
+    * ``("metrics",)`` → ``("ok", state)`` — drain the worker-local
+      metrics registry (counters + histograms accumulated since the last
+      drain) for cross-process aggregation (ISSUE 8).
     * ``("exit",)`` → worker cleans up and leaves.
     """
     import os
 
     kernels: Dict[tuple, Any] = {}
     scratch = _Scratch()
+    # Worker-local metrics (ISSUE 8): accumulated here without any IPC
+    # on the hot path, merged into the parent registry on drain.
+    metrics = MetricsRegistry()
     try:
         while True:
             try:
@@ -175,9 +182,20 @@ def worker_main(conn, pe_name: str) -> None:
                     t1 = time.perf_counter()
                     scratch.reset()
                     out_handles = [scratch.place(o) for o in outs]
+                    metrics.counter(f"worker/{pe_name}/tasks").inc()
+                    metrics.histogram(
+                        f"worker/{pe_name}/kernel_s").record(t1 - t0)
                     conn.send(("ok", out_handles, t0, t1))
                 except BaseException:
+                    metrics.counter(f"worker/{pe_name}/errors").inc()
                     conn.send(("err", traceback.format_exc()))
+                continue
+            if cmd == "metrics":
+                # Drain semantics: each reply carries only the delta
+                # since the previous drain, so the parent can merge at
+                # every session close without double counting.
+                conn.send(("ok", metrics.state()))
+                metrics = MetricsRegistry()
                 continue
             conn.send(("err", f"unknown command {cmd!r}"))  # pragma: no cover
     finally:
@@ -275,6 +293,14 @@ class ProcessWorker:
         k1 = min(max(t1_w + self.clock_offset, k0), w1)
         return outs, w0, w1, k0, k1
 
+    def metrics_state(self) -> Dict[str, Any]:
+        """Drain the worker's local metrics registry: returns a
+        :meth:`~repro.core.trace.MetricsRegistry.state` dict and resets
+        the worker-side accumulators."""
+        with self._lock:
+            reply = self._rpc(("metrics",))
+        return reply[1]
+
     @property
     def alive(self) -> bool:
         return self.proc.is_alive()
@@ -338,6 +364,23 @@ class ProcessWorkerPool:
     def pids(self) -> Dict[str, int]:
         with self._lock:
             return {n: w.pid for n, w in self._workers.items()}
+
+    def collect_metrics(self, registry: MetricsRegistry) -> int:
+        """Drain every live worker's local metrics into ``registry``
+        (ISSUE 8 cross-process aggregation).  Dead workers are skipped —
+        their un-drained deltas are lost, which is the documented
+        trade-off for a lock-free worker hot path.  Returns the number
+        of workers merged."""
+        with self._lock:
+            workers = list(self._workers.values())
+        merged = 0
+        for w in workers:
+            try:
+                registry.merge_state(w.metrics_state())
+                merged += 1
+            except (WorkerDied, RuntimeError):
+                continue
+        return merged
 
     def procs(self) -> List[mp.Process]:
         with self._lock:

@@ -103,17 +103,26 @@ class ClientState:
     fields are guarded by the owning :class:`QoSManager`'s lock."""
 
     __slots__ = ("name", "weight", "window", "quota_bytes", "think_s",
+                 "slo_latency_s", "slo_target",
                  "inflight", "deficit", "admitted", "waiting")
 
     def __init__(self, name: str, *, weight: float = 1.0, window: int = 64,
                  quota_bytes: Optional[int] = None,
-                 think_s: float = 0.0) -> None:
+                 think_s: float = 0.0,
+                 slo_latency_s: Optional[float] = None,
+                 slo_target: float = 0.99) -> None:
         if weight <= 0:
             raise ValueError(f"client weight must be > 0, got {weight}")
         if window <= 0:
             raise ValueError(f"client window must be > 0, got {window}")
         if think_s < 0:
             raise ValueError(f"client think_s must be >= 0, got {think_s}")
+        if slo_latency_s is not None and slo_latency_s <= 0:
+            raise ValueError(
+                f"client slo_latency_s must be > 0, got {slo_latency_s}")
+        if not 0.0 < slo_target < 1.0:
+            raise ValueError(
+                f"client slo_target must be in (0, 1), got {slo_target}")
         self.name = name
         self.weight = float(weight)
         self.window = int(window)
@@ -125,6 +134,13 @@ class ClientState:
         # deterministic replay (fair_replay) consumes it — live
         # admission sees real submission timing.
         self.think_s = float(think_s)
+        # Per-tenant latency SLO (ISSUE 8): a modeled-latency objective
+        # this tenant declared.  None = no objective; qos_report() grows
+        # an ``slo`` section (burn rate, breached flag) and the trace
+        # gains alert instants for tenants that set one.
+        self.slo_latency_s = (None if slo_latency_s is None
+                              else float(slo_latency_s))
+        self.slo_target = float(slo_target)
         self.inflight = 0  # admitted-but-incomplete tasks
         self.deficit = 0.0  # DRR byte credit (only while backlogged)
         self.admitted = 0  # total grants (diagnostics)
@@ -248,7 +264,9 @@ class QoSManager:
     def client(self, name: str, *, weight: Optional[float] = None,
                window: Optional[int] = None,
                quota_bytes: Optional[int] = None,
-               think_s: Optional[float] = None) -> ClientState:
+               think_s: Optional[float] = None,
+               slo_latency_s: Optional[float] = None,
+               slo_target: Optional[float] = None) -> ClientState:
         """Get-or-create the named client; passed keywords update the
         existing configuration (omitted ones are preserved)."""
         with self._cv:
@@ -260,6 +278,8 @@ class QoSManager:
                     window=window if window is not None else self.default_window,
                     quota_bytes=quota_bytes,
                     think_s=think_s if think_s is not None else 0.0,
+                    slo_latency_s=slo_latency_s,
+                    slo_target=slo_target if slo_target is not None else 0.99,
                 )
                 self._clients[name] = st
                 self._wheel.add(name, st.weight)
@@ -279,6 +299,15 @@ class QoSManager:
                     if think_s < 0:
                         raise ValueError("client think_s must be >= 0")
                     st.think_s = float(think_s)
+                if slo_latency_s is not None:
+                    if slo_latency_s <= 0:
+                        raise ValueError("client slo_latency_s must be > 0")
+                    st.slo_latency_s = float(slo_latency_s)
+                if slo_target is not None:
+                    if not 0.0 < slo_target < 1.0:
+                        raise ValueError(
+                            "client slo_target must be in (0, 1)")
+                    st.slo_target = float(slo_target)
             return st
 
     def weights(self) -> Dict[str, float]:
@@ -293,7 +322,9 @@ class QoSManager:
                 "clients": {
                     n: {"weight": c.weight, "window": c.window,
                         "quota_bytes": c.quota_bytes,
-                        "think_s": c.think_s}
+                        "think_s": c.think_s,
+                        "slo_latency_s": c.slo_latency_s,
+                        "slo_target": c.slo_target}
                     for n, c in self._clients.items()
                 },
                 "default_window": self.default_window,
@@ -410,7 +441,8 @@ class QoSManager:
                 "clients": {
                     n: {"inflight": c.inflight, "admitted": c.admitted,
                         "waiting": len(c.waiting), "weight": c.weight,
-                        "window": c.window}
+                        "window": c.window,
+                        "deficit": self._wheel.deficit.get(n, 0.0)}
                     for n, c in self._clients.items()
                 },
             }

@@ -58,6 +58,7 @@ from .graph import CostModel
 from .hete import HeteContext, HeteData, MemorySpace
 from .instrument import Timeline, TimelineEvent
 from .locations import HOST, Location
+from .telemetry import DivergenceMonitor
 
 __all__ = ["PE", "Task", "Runtime", "make_emulated_soc", "SCHEDULERS",
            "BACKENDS", "resolve_backend", "register_platform",
@@ -213,6 +214,11 @@ class Runtime:
         self.policy = policy
         self.scheduler = scheduler
         self.cost_model = cost_model or CostModel()
+        # Measured-vs-modeled divergence (ISSUE 8): every compute/stage
+        # execution pairs its wall duration with the cost model's prior
+        # into per-(op, PE kind, shape bucket) ratio cells — surfaced in
+        # Session.qos_report()["divergence"] and bench JSON records.
+        self.divergence = DivergenceMonitor()
         self._rr_state: Dict[str, int] = {}
         # kernels: (op, pe_kind) -> callable(list_of_arrays, **params) -> tuple
         self._kernels: Dict[tuple, Callable] = {}
@@ -430,18 +436,22 @@ class Runtime:
         every PE whose space holds host payloads; other PEs (real JAX
         devices) execute in-process as before."""
         if self.backend == "process" and self._proc_eligible(pe):
-            return self._run_kernel_process(task, pe, ins)
-        fn = self._kernels[(task.op, pe.kind)]
-        t0 = time.perf_counter()
-        outs = _as_tuple(fn(ins, **task.params))
-        if pe.location != HOST:
-            try:
-                import jax
-                outs = tuple(jax.block_until_ready(o) for o in outs)
-            except ImportError:  # pragma: no cover - jax is baked in
-                pass
-        dt = time.perf_counter() - t0
-        self.cost_model.observe(task.op, pe.kind, task.in_bytes, dt)
+            outs, dt = self._run_kernel_process(task, pe, ins)
+        else:
+            fn = self._kernels[(task.op, pe.kind)]
+            t0 = time.perf_counter()
+            outs = _as_tuple(fn(ins, **task.params))
+            if pe.location != HOST:
+                try:
+                    import jax
+                    outs = tuple(jax.block_until_ready(o) for o in outs)
+                except ImportError:  # pragma: no cover - jax is baked in
+                    pass
+            dt = time.perf_counter() - t0
+            self.cost_model.observe(task.op, pe.kind, task.in_bytes, dt)
+        self.divergence.observe(
+            "compute", task.op, pe.kind, task.in_bytes, dt,
+            self.cost_model.prior_estimate(task.op, pe.kind, task.in_bytes))
         return outs, dt
 
     def _run_kernel_process(self, task: Task, pe: PE,
@@ -545,14 +555,17 @@ class Runtime:
             pe = self._schedule(task)
             w0 = time.perf_counter()
             ins, tr_s, sp_s, moves = self._stage_inputs(task, pe)
-            w_staged = time.perf_counter() if tracer is not None else w0
+            w_staged = time.perf_counter()
             try:
                 outs, comp_s = self._run_kernel(task, pe, ins)
-                w_comp = time.perf_counter() if tracer is not None else w_staged
+                w_comp = time.perf_counter()
                 out_s, sp2_s = self._commit_outputs(task, pe, outs)
             finally:
                 self._unpin_inputs(task, pe.location)
             w1 = time.perf_counter()
+            self.divergence.observe(
+                "stage", task.op, pe.kind, task.in_bytes,
+                w_staged - w0, tr_s + sp_s)
             if tracer is not None:
                 tname = task.name or task.op
                 targs = {"task": tname, "op": task.op, "node": node_i}

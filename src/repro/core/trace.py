@@ -106,6 +106,7 @@ class TraceCollector:
         self._baseline: Dict[str, dict] = {}  # label -> per_link at attach
         self._epoch: Dict[str, int] = {}  # label -> ledger reset epoch
         self._edges: Dict[str, List[Tuple[int, int]]] = {}  # run -> dep edges
+        self._divergence: Optional[dict] = None  # wall/modeled ratio table
         self._nctx = 0
         self._nrun = 0
 
@@ -301,6 +302,26 @@ class TraceCollector:
         with self._lock:
             self._edges.setdefault(run, []).extend((int(a), int(b)) for a, b in edges)
 
+    def add_model_instant(
+        self,
+        name: str,
+        cat: str,
+        track: str,
+        t: float,
+        args: Optional[dict] = None,
+    ) -> None:
+        """Record an instant on the *modeled* timebase (e.g. an SLO alert
+        at a replayed finish time).  ``t`` is in modeled seconds."""
+        with self._lock:
+            self._model.append(("i", name, cat, track, float(t), 0.0, args))
+
+    def set_divergence(self, table: Optional[dict]) -> None:
+        """Attach a wall/modeled divergence table (``DivergenceMonitor
+        .table()``); embedded under ``rimms.divergence`` on export so the
+        profile CLI can render it without re-deriving pairings."""
+        with self._lock:
+            self._divergence = table
+
     def add_tenant_spans(self, spans: Sequence[tuple], run: str) -> None:
         """Modeled per-tenant residency: (client, t0, t1, name, node)."""
         out = []
@@ -374,6 +395,7 @@ class TraceCollector:
             contexts = dict(self._contexts)
             baseline = {k: dict(v) for k, v in self._baseline.items()}
             epochs = dict(self._epoch)
+            divergence = self._divergence
         wall: List[tuple] = []
         for r in rings:
             wall.extend(list(r.events))
@@ -462,6 +484,8 @@ class TraceCollector:
                 "n_model_events": len(model),
             },
         }
+        if divergence is not None:
+            doc["rimms"]["divergence"] = divergence
         if path is not None:
             with open(path, "w") as fh:
                 json.dump(doc, fh)
@@ -600,21 +624,14 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
-    def percentile(self, q: float) -> float:
-        """Value at the q-th percentile, accurate to the bucket width."""
+    def percentile(self, q: float) -> Optional[float]:
+        """Value at the q-th percentile, accurate to the bucket width.
+
+        Returns ``None`` for an empty histogram — callers must not
+        confuse "no samples" with "all samples were zero".
+        """
         with self._lock:
-            if self.count == 0:
-                return 0.0
-            rank = max(1, math.ceil(self.count * q / 100.0))
-            cum = 0
-            for idx in sorted(self._counts):
-                cum += self._counts[idx]
-                if cum >= rank:
-                    if idx == _ZERO_BUCKET:
-                        return 0.0
-                    hi = 2.0 ** ((idx + 1) / self.SUBBUCKETS)
-                    return min(max(hi, self.min), self.max)
-            return self.max
+            return self.percentile_unlocked(q)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -630,9 +647,9 @@ class Histogram:
             }
 
     # snapshot() holds the lock; percentile() would deadlock on re-entry.
-    def percentile_unlocked(self, q: float) -> float:
+    def percentile_unlocked(self, q: float) -> Optional[float]:
         if self.count == 0:
-            return 0.0
+            return None
         rank = max(1, math.ceil(self.count * q / 100.0))
         cum = 0
         for idx in sorted(self._counts):
@@ -643,6 +660,46 @@ class Histogram:
                 hi = 2.0 ** ((idx + 1) / self.SUBBUCKETS)
                 return min(max(hi, self.min), self.max)
         return self.max
+
+    # -- state transfer / merge (cross-process aggregation, ISSUE 8) -------
+
+    def to_state(self) -> dict:
+        """Picklable/JSON-safe snapshot of the full bucket state."""
+        with self._lock:
+            return {
+                "name": self.name,
+                "count": self.count,
+                "sum": self.sum,
+                "min": self.min if self.count else None,
+                "max": self.max if self.count else None,
+                "counts": {str(k): v for k, v in self._counts.items()},
+            }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "Histogram":
+        h = cls(state.get("name", ""))
+        h.merge(state)
+        return h
+
+    def merge(self, other: Union["Histogram", dict]) -> "Histogram":
+        """Fold ``other`` (a Histogram or a ``to_state()`` dict) into this
+        one.  Exact on counts/sum/min/max and bucket-exact on percentiles
+        — merging is associative and commutative because buckets are
+        fixed by value, not by sample order."""
+        state = other.to_state() if isinstance(other, Histogram) else other
+        counts = state.get("counts", {})
+        with self._lock:
+            self.count += int(state.get("count", 0))
+            self.sum += float(state.get("sum", 0.0))
+            o_min, o_max = state.get("min"), state.get("max")
+            if o_min is not None and o_min < self.min:
+                self.min = float(o_min)
+            if o_max is not None and o_max > self.max:
+                self.max = float(o_max)
+            for k, v in counts.items():
+                idx = int(k)
+                self._counts[idx] = self._counts.get(idx, 0) + int(v)
+        return self
 
 
 class MetricsRegistry:
@@ -682,6 +739,26 @@ class MetricsRegistry:
             items = list(self._instruments.items())
         return {name: inst.snapshot() for name, inst in sorted(items)}
 
+    # -- cross-process aggregation (ISSUE 8) --------------------------------
+
+    def state(self) -> dict:
+        """Picklable, mergeable registry state.  Counters travel as their
+        totals and histograms as full bucket states; gauges are
+        point-in-time local readings and deliberately do not transfer."""
+        with self._lock:
+            items = list(self._instruments.items())
+        counters = {n: i.value for n, i in items if isinstance(i, Counter)}
+        hists = {n: i.to_state() for n, i in items if isinstance(i, Histogram)}
+        return {"counters": counters, "histograms": hists}
+
+    def merge_state(self, state: dict) -> None:
+        """Fold a ``state()`` dict (e.g. shipped back from a process-backend
+        worker at run end) into this registry."""
+        for name, v in sorted((state.get("counters") or {}).items()):
+            self.counter(name).inc(int(v))
+        for name, hs in sorted((state.get("histograms") or {}).items()):
+            self.histogram(name).merge(hs)
+
 
 # ---------------------------------------------------------------------------
 # trace_lint: the trace as a correctness cross-check
@@ -710,7 +787,12 @@ def trace_lint(trace_or_path: Union[dict, str], eps: float = 1e-9) -> List[str]:
        baseline;
     4. causality — no modeled compute span starts before its own
        staging/transfer spans end (matched by (run, node));
-    5. completeness — the ring buffers dropped nothing.
+    5. completeness — the ring buffers dropped nothing;
+    6. worker forwarding — wall spans forwarded from process-backend
+       workers (tracks ending ``:worker``) carry ``args.backend ==
+       "process"`` and nest inside a compute span on the parent PE
+       track; a worker span with no enclosing parent compute window is
+       an orphan.
     """
     doc = _load(trace_or_path)
     violations: List[str] = []
@@ -816,6 +898,42 @@ def trace_lint(trace_or_path: Union[dict, str], eps: float = 1e-9) -> List[str]:
                 f"causality: node {node} ({e.get('name')}) compute starts at "
                 f"{cs:.3f}us before its {e.get('cat')} ends at "
                 f"{e['ts'] + e.get('dur', 0):.3f}us (run {run or 'wall'!r})"
+            )
+
+    # 6. process-backend worker forwarding: every wall span on a
+    # ":worker" track must be tagged backend=process and sit inside a
+    # compute span on its parent PE track (forward_span clamps to the
+    # parent-observed call window, so true forwards always nest; an
+    # orphan means a span was forged or mis-clamped).
+    worker_eps = max(eps, 1e-3)  # us; forwarded spans are clamped, allow 1 ns
+    parent_computes: Dict[str, List[Tuple[float, float]]] = {}
+    for e in spans:
+        if e.get("pid") != WALL_PID or e.get("cat") != "compute":
+            continue
+        track = tid_track.get((e.get("pid"), e.get("tid")), "")
+        if track.endswith(":worker"):
+            continue
+        parent_computes.setdefault(track, []).append(
+            (e["ts"], e["ts"] + e.get("dur", 0))
+        )
+    for e in spans:
+        if e.get("pid") != WALL_PID:
+            continue
+        track = tid_track.get((e.get("pid"), e.get("tid")), "")
+        if not track.endswith(":worker"):
+            continue
+        name = e.get("name", "?")
+        if e.get("args", {}).get("backend") != "process":
+            violations.append(
+                f"worker span {name!r} on track {track!r} missing "
+                f"args.backend='process'"
+            )
+        t0, t1 = e["ts"], e["ts"] + e.get("dur", 0)
+        windows = parent_computes.get(track[: -len(":worker")], [])
+        if not any(w0 - worker_eps <= t0 and t1 <= w1 + worker_eps for w0, w1 in windows):
+            violations.append(
+                f"orphaned worker span {name!r} on track {track!r}: "
+                f"[{t0:.3f}, {t1:.3f}]us not nested in any parent compute span"
             )
 
     # 5. completeness

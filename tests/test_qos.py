@@ -582,4 +582,6 @@ def test_qos_manager_client_update_and_validation():
         q.client("bad2", window=0)
     params = q.params()
     assert params["clients"]["a"] == {"weight": 2.0, "window": 3,
-                                      "quota_bytes": None, "think_s": 0.0}
+                                      "quota_bytes": None, "think_s": 0.0,
+                                      "slo_latency_s": None,
+                                      "slo_target": 0.99}

@@ -294,7 +294,8 @@ def test_histogram_percentiles_match_numpy_within_bucket_error():
 
 def test_histogram_edge_cases():
     h = Histogram()
-    assert h.percentile(50) == 0.0 and h.mean == 0.0
+    # empty histogram: no samples -> percentile is None, not a raise
+    assert h.percentile(50) is None and h.mean == 0.0
     h.record(0.0)
     h.record(-1.0)
     assert h.percentile(99) == 0.0  # non-positive values -> zero bucket
