@@ -79,6 +79,7 @@ class TransferLedger:
     client_service_s: Counter = dataclasses.field(default_factory=Counter)
     client_stall_s: Counter = dataclasses.field(default_factory=Counter)
     client_evictions: Counter = dataclasses.field(default_factory=Counter)
+    client_writeback_bytes: Counter = dataclasses.field(default_factory=Counter)
     client_failures: Counter = dataclasses.field(default_factory=Counter)
     # -- tracing hook (ISSUE 6): when a TraceCollector is attached, every
     # record() emits a matching trace event *under the ledger lock*, so
@@ -130,6 +131,7 @@ class TransferLedger:
             self.spill_stall_s += stall_s
             if owner is not None:
                 self.client_evictions[owner] += 1
+                self.client_writeback_bytes[owner] += writeback_bytes
             if (target is not None and target.kind != "host"
                     and writeback_bytes > 0):
                 self.spills_to_peer += 1
@@ -268,6 +270,7 @@ class TransferLedger:
             self.client_service_s.clear()
             self.client_stall_s.clear()
             self.client_evictions.clear()
+            self.client_writeback_bytes.clear()
             self.client_failures.clear()
             if self.tracer is not None:
                 # Open a fresh conservation epoch: trace events recorded
@@ -297,6 +300,9 @@ class TransferLedger:
                 "client_tasks": dict(sorted(self.client_tasks.items())),
                 "client_service_s": dict(
                     sorted(self.client_service_s.items())
+                ),
+                "client_writeback_bytes": dict(
+                    sorted(self.client_writeback_bytes.items())
                 ),
             }
 

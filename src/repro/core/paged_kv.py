@@ -30,8 +30,20 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .allocator import AllocError, Extent, make_allocator
+from .qos import QuotaExceeded
 
-__all__ = ["PagedKVPool", "init_pool_arrays", "write_token", "gather_kv"]
+__all__ = [
+    "PagedKVPool",
+    "SCRATCH_SEQ",
+    "init_pool_arrays",
+    "write_token",
+    "gather_kv",
+]
+
+#: reserved sequence id for the sacrificial scratch page: inactive batch
+#: slots and block-table padding point at it so full-batch scatter/gather
+#: kernels never touch live pages.
+SCRATCH_SEQ = -1
 
 
 @dataclasses.dataclass
@@ -39,10 +51,19 @@ class _SeqInfo:
     extents: List[Extent]
     page_ids: List[int]
     n_tokens: int = 0
+    tenant: Optional[str] = None
 
 
 class PagedKVPool:
-    """Host-side page bookkeeping for a device KV pool."""
+    """Host-side page bookkeeping for a device KV pool.
+
+    With ``scratch=True`` the pool reserves one sacrificial page at
+    construction under :data:`SCRATCH_SEQ`; it is pinned for the pool's
+    lifetime (``free_sequence(SCRATCH_SEQ)`` raises) and is charged to no
+    tenant.  Per-tenant page quotas (``set_quota``) turn over-budget
+    allocations into :class:`~repro.core.qos.QuotaExceeded` instead of
+    silently eating the shared pool.
+    """
 
     def __init__(
         self,
@@ -50,23 +71,63 @@ class PagedKVPool:
         num_pages: int,
         page_size: int,
         allocator: str = "bitset",
+        scratch: bool = False,
     ) -> None:
         self.num_pages = num_pages
         self.page_size = page_size
         # Arena in units of pages: block_size=1 page.
         self.arena = make_allocator(allocator, capacity=num_pages, block_size=1)
         self._seqs: Dict[int, _SeqInfo] = {}
+        self._quotas: Dict[str, int] = {}
+        self._tenant_pages: Dict[str, int] = {}
         self.fragment_allocs = 0  # single-search contiguous grabs
         self.fallback_allocs = 0  # per-page fallbacks under fragmentation
+        self.scratch_page: Optional[int] = None
+        if scratch:
+            table = self.alloc_sequence(SCRATCH_SEQ, 1)
+            self.scratch_page = int(table[0])
+
+    # -- tenant quotas ------------------------------------------------------
+    def set_quota(self, tenant: str, max_pages: Optional[int]) -> None:
+        """Cap ``tenant`` at ``max_pages`` live pages (None clears)."""
+        if max_pages is None:
+            self._quotas.pop(tenant, None)
+        else:
+            self._quotas[tenant] = int(max_pages)
+
+    def tenant_pages(self, tenant: str) -> int:
+        """Pages currently held by ``tenant`` (scratch never counts)."""
+        return self._tenant_pages.get(tenant, 0)
+
+    def _charge(self, tenant: Optional[str], n_pages: int) -> None:
+        if tenant is None:
+            return
+        quota = self._quotas.get(tenant)
+        held = self._tenant_pages.get(tenant, 0)
+        if quota is not None and held + n_pages > quota:
+            raise QuotaExceeded(
+                f"tenant {tenant!r} KV quota exceeded: holds {held} pages, "
+                f"wants {n_pages} more, quota {quota}",
+                tenant=tenant, location="kv_pool",
+            )
+        self._tenant_pages[tenant] = held + n_pages
 
     # -- allocation ---------------------------------------------------------
-    def alloc_sequence(self, seq_id: int, n_tokens: int) -> np.ndarray:
+    def alloc_sequence(
+        self, seq_id: int, n_tokens: int, *, tenant: Optional[str] = None
+    ) -> np.ndarray:
         """Reserve pages for ``n_tokens`` tokens; returns int32 page ids."""
         if seq_id in self._seqs:
             raise KeyError(f"sequence {seq_id} already allocated")
         n_pages = max(1, -(-n_tokens // self.page_size))
-        extents, page_ids = self._grab(n_pages)
-        self._seqs[seq_id] = _SeqInfo(extents, page_ids, n_tokens)
+        self._charge(tenant, n_pages)  # quota check before touching arena
+        try:
+            extents, page_ids = self._grab(n_pages)
+        except AllocError:
+            if tenant is not None:
+                self._tenant_pages[tenant] -= n_pages
+            raise
+        self._seqs[seq_id] = _SeqInfo(extents, page_ids, n_tokens, tenant)
         return np.asarray(page_ids, dtype=np.int32)
 
     def extend_sequence(self, seq_id: int, n_new_tokens: int) -> np.ndarray:
@@ -74,7 +135,14 @@ class PagedKVPool:
         info = self._seqs[seq_id]
         need = -(-(info.n_tokens + n_new_tokens) // self.page_size)
         if need > len(info.page_ids):
-            extents, page_ids = self._grab(need - len(info.page_ids))
+            grow = need - len(info.page_ids)
+            self._charge(info.tenant, grow)
+            try:
+                extents, page_ids = self._grab(grow)
+            except AllocError:
+                if info.tenant is not None:
+                    self._tenant_pages[info.tenant] -= grow
+                raise
             info.extents.extend(extents)
             info.page_ids.extend(page_ids)
         info.n_tokens += n_new_tokens
@@ -105,7 +173,17 @@ class PagedKVPool:
         return extents, [e.offset for e in extents]
 
     def free_sequence(self, seq_id: int) -> None:
-        info = self._seqs.pop(seq_id)
+        if seq_id == SCRATCH_SEQ and self.scratch_page is not None:
+            raise ValueError(
+                "scratch page is pool-owned and pinned; it cannot be freed"
+            )
+        info = self._seqs.pop(seq_id, None)
+        if info is None:
+            raise KeyError(
+                f"sequence {seq_id} is not allocated (double free?)"
+            )
+        if info.tenant is not None:
+            self._tenant_pages[info.tenant] -= len(info.page_ids)
         for ext in info.extents:
             self.arena.free(ext)
 
@@ -113,6 +191,10 @@ class PagedKVPool:
     @property
     def free_pages(self) -> int:
         return self.arena.free_bytes  # capacity is in page units
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - self.free_pages
 
     def n_tokens(self, seq_id: int) -> int:
         return self._seqs[seq_id].n_tokens

@@ -26,7 +26,10 @@ from repro.core.paged_kv import PagedKVPool, init_pool_arrays, write_token
 from repro.kernels.paged_attention import ref as pa_ref
 from repro.models import layers as L
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "SUPPORTED_FAMILIES"]
+
+#: full-attention dense decoder families the paged engines support.
+SUPPORTED_FAMILIES = ("dense", "vlm")
 
 
 @dataclasses.dataclass
@@ -43,28 +46,33 @@ class ServeEngine:
                  page_size: int = 16, num_pages: int = 512,
                  max_pages_per_seq: int = 32, allocator: str = "bitset",
                  eos_id: Optional[int] = None):
-        assert cfg.family in ("dense", "vlm"), (
-            "engine supports full-attention dense decoder families"
-        )
+        if cfg.family not in SUPPORTED_FAMILIES:
+            raise ValueError(
+                f"serve engine supports full-attention dense decoder "
+                f"families {SUPPORTED_FAMILIES}, got {cfg.family!r}"
+            )
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
         self.max_pages = max_pages_per_seq
         self.max_batch = max_batch
         self.eos_id = eos_id
+        # scratch=True reserves the sacrificial scratch page inside the
+        # pool's own accounting: inactive slots' block tables point at
+        # it, so their masked writes never corrupt a live sequence's
+        # pages, and no tenant can free it or get billed for it.
         self.pool = PagedKVPool(num_pages=num_pages, page_size=page_size,
-                                allocator=allocator)
-        # page 0 is a sacrificial scratch page: inactive slots' block
-        # tables point at it, so their masked writes never corrupt a
-        # live sequence's pages.
-        self.pool.alloc_sequence(-1, 1)
+                                allocator=allocator, scratch=True)
+        self.scratch_page = self.pool.scratch_page
         n_layers = cfg.n_layers
         kv, hd = cfg.n_kv_heads, cfg.head_dim_
         k0, v0 = init_pool_arrays(num_pages, page_size, kv, hd, L.cdtype(cfg))
         self.k_pools = jnp.broadcast_to(k0, (n_layers,) + k0.shape).copy()
         self.v_pools = jnp.broadcast_to(v0, (n_layers,) + v0.shape).copy()
         # slot state (host side — RIMMS metadata lives on host, §3.2.2)
-        self.block_tables = np.zeros((max_batch, max_pages_per_seq), np.int32)
+        self.block_tables = np.full(
+            (max_batch, max_pages_per_seq), self.scratch_page, np.int32
+        )
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros((max_batch,), np.int32)
         self.slot_tok = np.zeros((max_batch,), np.int32)
@@ -74,6 +82,15 @@ class ServeEngine:
 
     # -- request admission --------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> Request:
+        if not prompt:
+            raise ValueError("prompt must be non-empty")
+        need = -(-(len(prompt) + max_new_tokens) // self.page_size)
+        if need > self.max_pages:
+            raise ValueError(
+                f"request needs {need} pages "
+                f"({len(prompt)} prompt + {max_new_tokens} new tokens) "
+                f"but max_pages_per_seq is {self.max_pages}"
+            )
         req = Request(self._next_rid, list(prompt), max_new_tokens)
         self._next_rid += 1
         self.waiting.append(req)
@@ -86,8 +103,7 @@ class ServeEngine:
             req = self.waiting.pop(0)
             n_tokens = len(req.prompt) + req.max_new_tokens
             table = self.pool.alloc_sequence(req.rid, n_tokens)
-            assert len(table) <= self.max_pages, "request exceeds max_pages"
-            self.block_tables[slot, :] = 0
+            self.block_tables[slot, :] = self.scratch_page
             self.block_tables[slot, : len(table)] = table
             self.slot_req[slot] = req
             # prefill by teacher-forced decode over the prompt
@@ -132,6 +148,9 @@ class ServeEngine:
                 req.done = True
                 self.pool.free_sequence(req.rid)
                 self.slot_req[slot] = None
+                # re-point the idle slot at the scratch page so its
+                # masked writes can't land in pages the pool recycles.
+                self.block_tables[slot, :] = self.scratch_page
         return int(active.sum())
 
     def run(self, max_steps: int = 1000) -> None:

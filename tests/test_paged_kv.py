@@ -5,7 +5,14 @@ import numpy as np
 import pytest
 
 from repro.core.allocator import AllocError
-from repro.core.paged_kv import PagedKVPool, gather_kv, init_pool_arrays, write_token
+from repro.core.paged_kv import (
+    SCRATCH_SEQ,
+    PagedKVPool,
+    gather_kv,
+    init_pool_arrays,
+    write_token,
+)
+from repro.core.qos import QuotaExceeded
 
 
 def test_alloc_extend_free_cycle():
@@ -39,6 +46,82 @@ def test_pool_exhaustion_rolls_back():
         pool.alloc_sequence(1, 16)
     # partial grabs must have been rolled back
     assert pool.free_pages == 2
+
+
+def test_scratch_page_is_pinned_and_unbilled():
+    pool = PagedKVPool(num_pages=8, page_size=4, scratch=True)
+    assert pool.scratch_page is not None
+    assert pool.used_pages == 1  # scratch page is accounted for…
+    pool.set_quota("t", 2)
+    pool.alloc_sequence(0, 8, tenant="t")  # 2 pages — exactly at quota
+    assert pool.tenant_pages("t") == 2  # …but billed to no tenant
+    with pytest.raises(ValueError, match="pinned"):
+        pool.free_sequence(SCRATCH_SEQ)
+    assert pool.used_pages == 3
+
+
+def test_double_free_raises():
+    pool = PagedKVPool(num_pages=8, page_size=4)
+    pool.alloc_sequence(0, 4)
+    pool.free_sequence(0)
+    with pytest.raises(KeyError, match="double free"):
+        pool.free_sequence(0)
+    assert pool.free_pages == 8
+
+
+def test_tenant_quota_enforced_and_released():
+    pool = PagedKVPool(num_pages=16, page_size=4, scratch=True)
+    pool.set_quota("small", 3)
+    pool.alloc_sequence(0, 8, tenant="small")  # 2 pages
+    with pytest.raises(QuotaExceeded) as ei:
+        pool.alloc_sequence(1, 8, tenant="small")  # would be 4 > 3
+    assert ei.value.tenant == "small"
+    # another tenant is unaffected by the breach
+    pool.alloc_sequence(2, 8, tenant="big")
+    # freeing returns the pages to the tenant's budget
+    pool.free_sequence(0)
+    assert pool.tenant_pages("small") == 0
+    pool.alloc_sequence(3, 12, tenant="small")  # 3 pages — fits again
+    assert pool.tenant_pages("small") == 3
+
+
+def test_quota_rolls_back_when_pool_exhausted():
+    pool = PagedKVPool(num_pages=4, page_size=4)
+    pool.set_quota("t", 100)  # quota permits, the shared pool does not
+    pool.alloc_sequence(0, 12, tenant="t")  # 3 of 4 pages
+    with pytest.raises(AllocError):
+        pool.alloc_sequence(1, 8, tenant="t")
+    assert pool.tenant_pages("t") == 3  # failed grab not billed
+    pool.free_sequence(0)
+    assert pool.free_pages == 4
+
+
+def test_free_realloc_churn_never_double_assigns():
+    """Continuous-batching churn: interleaved alloc/free across both
+    allocators must keep live page sets disjoint and leak nothing."""
+    for allocator in ("bitset", "nextfit"):
+        pool = PagedKVPool(num_pages=24, page_size=4, allocator=allocator,
+                           scratch=True)
+        rng = np.random.default_rng(3)
+        live = {}  # seq_id -> set of page ids
+        next_id = 0
+        for _ in range(200):
+            if live and (len(live) > 4 or rng.random() < 0.4):
+                sid = sorted(live)[int(rng.integers(len(live)))]
+                pool.free_sequence(sid)
+                del live[sid]
+            else:
+                table = pool.alloc_sequence(
+                    next_id, int(rng.integers(1, 17)))
+                live[next_id] = set(int(p) for p in table)
+                next_id += 1
+            pages = [p for s in live.values() for p in s]
+            assert len(pages) == len(set(pages)), "page double-assigned"
+            assert pool.scratch_page not in pages
+            assert pool.used_pages == len(pages) + 1
+        for sid in sorted(live):
+            pool.free_sequence(sid)
+        assert pool.used_pages == 1  # only the scratch page remains
 
 
 def test_write_and_gather_roundtrip():

@@ -75,5 +75,5 @@ def test_engine_batched_requests_and_page_recycling(setup):
 def test_engine_rejects_recurrent_families(setup):
     cfg, model, params = setup
     bad = dataclasses.replace(cfg, family="ssm")
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="dense"):
         ServeEngine(bad, params)
