@@ -1,0 +1,278 @@
+"""Measured calibration + Pallas autotuning acceptance bench (ISSUE 10).
+
+Two claims are checked, one per half of the tentpole:
+
+* **Calibrated placement** (part A, fully deterministic): on an
+  emulated platform whose *measured* throughputs invert the
+  ``CostModel`` priors (the priors claim the GPU is the fastest kind;
+  the synthetic "truth" calibration says the GPU is slow and the
+  fixed-function accelerators fast), a static HEFT plan built from the
+  calibrated model must cost no more than the prior-built plan when
+  both are priced under the truth model.  Nothing executes — both
+  plans come from :func:`repro.core.calibrate.heft_plan` and are priced
+  by :func:`~repro.core.calibrate.simulate_plan`, so the gated ratio
+  ``calibrated_vs_prior_makespan`` is exact across machines.
+
+* **Autotuned variants** (part B, measured): a live
+  :func:`repro.core.autotune.autotune` pass over the Pallas launch
+  parameters must find at least one non-default variant winning with a
+  measured speedup ≥ 1.0 over the baked-in default
+  (``nondefault_winners`` / ``winner_speedup``, both gated as lower
+  bounds), and dispatching the winning op through a calibrated session
+  must (a) select the winner (``Runtime.variant_log``) and (b) produce
+  output bit-identical to the default variant.
+
+Emits ``BENCH_calibrate.json`` for the CI perf-regression gate.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_calibrate [--smoke] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import emit
+
+#: part A workload: unpinned 2FZF chains at these sizes (complex64 n)
+PLAN_SIZES = (1 << 12, 1 << 14, 1 << 16)
+PLAN_CHAINS = 6
+#: truth throughputs (bytes/s) for the synthetic calibration table —
+#: deliberately inverting the CostModel priors (gpu 1.6e10 → slow,
+#: acc 8e9 → fastest)
+TRUE_THROUGHPUT = {"cpu": 1.0e9, "acc": 1.6e10, "gpu": 0.8e9}
+#: buckets the truth table covers (must span every task's in_bytes)
+TRUTH_LADDER = tuple(1 << p for p in range(12, 23))
+
+AUTOTUNE_LADDER = (64 << 10, 1 << 20)
+AUTOTUNE_LADDER_SMOKE = (64 << 10,)
+
+
+def _truth_table():
+    """Synthetic measured truth: linear-in-bytes timings from
+    TRUE_THROUGHPUT, one cell per (op, kind, bucket)."""
+    from repro.core.calibrate import CalibrationTable
+    from repro.core.graph import CostModel
+
+    table = CalibrationTable()
+    table.meta["synthetic"] = "bench_calibrate part A truth model"
+    for op in ("fft", "ifft", "zip"):
+        w = CostModel.OP_WEIGHT.get(op, 2.0)
+        for kind, thr in TRUE_THROUGHPUT.items():
+            for nb in TRUTH_LADDER:
+                s = CostModel.LAUNCH_LATENCY_S + nb * w / thr
+                table.record(op, "default", kind, nb, s)
+    return table
+
+
+def run_plan_gate() -> dict:
+    """Part A: prior-HEFT vs calibrated-HEFT, both priced under truth."""
+    from repro.apps.radar import build_2fzf, make_runtime
+    from repro.core.calibrate import heft_plan, simulate_plan
+    from repro.core.graph import CostModel
+
+    rt, ctx = make_runtime(
+        policy="rimms", scheduler="heft", n_cpu=1,
+        accelerators=("gpu0", "fft_acc0", "zip_acc0"),
+    )
+    try:
+        tasks = []
+        for i in range(PLAN_CHAINS):
+            n = PLAN_SIZES[i % len(PLAN_SIZES)]
+            _, chain = build_2fzf(ctx, n, pins=(None,) * 4, seed=100 + i)
+            tasks += chain
+
+        truth = _truth_table()
+        prior_cm = CostModel()                  # BASE_THROUGHPUT priors
+        calib_cm = CostModel(calibration=truth)  # measured truth attached
+
+        prior_plan = heft_plan(rt, tasks, cost_model=prior_cm)
+        calib_plan = heft_plan(rt, tasks, cost_model=calib_cm)
+        # price BOTH plans under the truth model — plan quality, not
+        # model optimism, is what's compared
+        prior_cost = simulate_plan(rt, tasks, prior_plan, cost_model=calib_cm)
+        calib_cost = simulate_plan(rt, tasks, calib_plan, cost_model=calib_cm)
+    finally:
+        rt.close()
+    ratio = calib_cost / max(prior_cost, 1e-12)
+
+    def _spread(plan):
+        names = sorted(set(plan))
+        return {pe: plan.count(pe) for pe in names}
+
+    emit(
+        "calibrate_plan_gate", calib_cost * 1e6,
+        f"prior_ms={prior_cost * 1e3:.3f};calib_ms={calib_cost * 1e3:.3f};"
+        f"ratio={ratio:.3f};tasks={len(tasks)}",
+    )
+    return {
+        "n_tasks": len(tasks),
+        "prior_plan_makespan_s": prior_cost,
+        "calibrated_plan_makespan_s": calib_cost,
+        "calibrated_vs_prior_makespan": ratio,
+        "prior_plan_spread": _spread(prior_plan),
+        "calibrated_plan_spread": _spread(calib_plan),
+    }
+
+
+def run_autotune_gate(*, smoke: bool) -> dict:
+    """Part B: live autotune; ≥1 non-default winner with speedup ≥ 1,
+    winner dispatch + bit-identity through a calibrated session."""
+    from repro.core.api import OpRegistry, Session
+    from repro.core.autotune import tunables, tuned_summary
+    from repro.core.calibrate import DEFAULT_VARIANT
+
+    ladder = AUTOTUNE_LADDER_SMOKE if smoke else AUTOTUNE_LADDER
+    reg = OpRegistry()
+    session = Session.emulated(n_cpu=1, accelerators=(), registry=reg)
+    try:
+        from repro.core.autotune import autotune
+
+        table = autotune(session, nbytes=ladder, k=5, warmup=2, seed=0)
+        tuned = tuned_summary(table)
+        nondefault = {key: win for key, win in tuned.items()
+                      if win["variant"] != DEFAULT_VARIANT}
+        winner_speedup = max(
+            (win["speedup"] for win in nondefault.values()), default=1.0)
+
+        # dispatch check: run the best non-default winner through the
+        # calibrated session; the runtime must select the winner variant
+        # and its output must be bit-identical to the default's.
+        dispatch = None
+        single_out = {t.op: t for t in tunables() if t.op != "rg_lru"}
+        candidates = [(key, win) for key, win in nondefault.items()
+                      if key.split("/")[0] in single_out
+                      and key.split("/")[1] == "cpu"]
+        if candidates:
+            from repro.core.telemetry import shape_bucket
+
+            key, win = max(candidates, key=lambda kv: kv[1]["speedup"])
+            op_name, _kind, bucket = key.split("/")
+            tun = single_out[op_name]
+            # regenerate the calibration inputs for the winning bucket
+            nb, ins = ladder[0], None
+            for n in ladder:
+                rng = np.random.default_rng([0, int(n)])
+                made = [np.asarray(a) for a in tun.make_inputs(rng, int(n))]
+                if shape_bucket(sum(a.nbytes for a in made)) == bucket:
+                    nb, ins = n, made
+                    break
+            assert ins is not None, (key, ladder)
+            session.runtime.reset_stats()
+            fut = session.submit(op_name, list(ins), name="dispatch_check")
+            out = fut.result(timeout=300)
+            session.barrier()
+            log = [v for (o, _k, v) in session.runtime.variant_log
+                   if o == op_name]
+            ref = tun.fn(ins)[0]  # default launch params
+            dispatch = {
+                "op": op_name,
+                "winner": win["variant"],
+                "variant_log": log,
+                "selected_winner": win["variant"] in log,
+                "bit_identical": bool(
+                    np.asarray(out).tobytes() == np.asarray(ref).tobytes()),
+            }
+    finally:
+        session.close()
+
+    emit(
+        "calibrate_autotune", winner_speedup,
+        f"nondefault_winners={len(nondefault)};"
+        f"winners={sorted(w['variant'] for w in nondefault.values())};"
+        f"ladder={list(ladder)}",
+    )
+    return {
+        "ladder": list(ladder),
+        "cells": len(table),
+        "tuned_winners": tuned,
+        "nondefault_winners": len(nondefault),
+        "winner_speedup": winner_speedup,
+        "dispatch": dispatch,
+        "skipped_ops": table.meta.get("skipped_ops", []),
+    }
+
+
+def run_calibrate(*, json_path, smoke: bool) -> dict:
+    plan = run_plan_gate()
+    tune = run_autotune_gate(smoke=smoke)
+
+    rec = {
+        "bench": "calibrate",
+        "plan": plan,
+        "autotune": tune,
+        # Gated metrics.  The plan ratio is fully deterministic (static
+        # plans under synthetic truth).  The autotune gates are lower
+        # bounds that hold by construction whenever autotuning works at
+        # all: a non-default winner exists and its measured speedup is
+        # >= 1 by the winner rule.
+        "gate": {
+            "calibrated_vs_prior_makespan":
+                plan["calibrated_vs_prior_makespan"],
+            "nondefault_winners": min(tune["nondefault_winners"], 1),
+            "winner_speedup": min(tune["winner_speedup"], 1.0),
+        },
+        "gate_directions": {
+            "nondefault_winners": "min",
+            "winner_speedup": "min",
+        },
+        "gate_tolerances": {
+            "calibrated_vs_prior_makespan": 0.0,
+            "nondefault_winners": 0.0,
+            "winner_speedup": 0.0,
+        },
+    }
+
+    if smoke:
+        assert plan["calibrated_vs_prior_makespan"] <= 1.0, (
+            f"calibrated HEFT plan costs MORE than the prior plan under "
+            f"the measured truth model: {plan}"
+        )
+        assert tune["nondefault_winners"] >= 1, (
+            f"autotuning found no non-default variant winner: "
+            f"{tune['tuned_winners']}"
+        )
+        assert tune["winner_speedup"] >= 1.0, tune
+        if tune["dispatch"] is not None:
+            assert tune["dispatch"]["selected_winner"], tune["dispatch"]
+            assert tune["dispatch"]["bit_identical"], tune["dispatch"]
+        print(
+            f"calibrate smoke: OK (plan ratio "
+            f"{plan['calibrated_vs_prior_makespan']:.3f}, "
+            f"{tune['nondefault_winners']} non-default winner(s), "
+            f"best speedup {tune['winner_speedup']:.2f}x)", flush=True)
+
+    if json_path:
+        Path(json_path).write_text(json.dumps(rec, indent=1))
+        print(f"wrote {json_path}", flush=True)
+    return rec
+
+
+def run(smoke: bool = False) -> None:
+    run_calibrate(json_path=None, smoke=smoke)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run with plan-ratio + winner asserts")
+    ap.add_argument("--json", default="BENCH_calibrate.json",
+                    help="machine-readable output path ('' to skip)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="export + lint a Perfetto trace of the run")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="write a METRICS_*.json divergence table "
+                         "(requires --trace-dir)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    from .common import tracing
+
+    with tracing(args.trace_dir, "calibrate", metrics_dir=args.metrics_dir):
+        run_calibrate(json_path=args.json or None, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

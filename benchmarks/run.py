@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: 2fft,2fzf,alloc,overhead,3zip,apps,"
                          "marking,roofline,graph,pressure,topology,stream,"
-                         "multitenant,serve")
+                         "multitenant,serve,calibrate")
     ap.add_argument("--json-dir", default=None, metavar="DIR",
                     help="write BENCH_*.json records for json-capable "
                          "benches into DIR")
@@ -30,10 +30,10 @@ def main() -> None:
                          "requires --trace-dir)")
     args = ap.parse_args()
     from . import (bench_2fft, bench_2fzf, bench_3zip, bench_alloc,
-                   bench_apps, bench_graph, bench_marking,
-                   bench_multitenant, bench_overhead, bench_pressure,
-                   bench_roofline, bench_serve, bench_stream,
-                   bench_topology)
+                   bench_apps, bench_calibrate, bench_graph,
+                   bench_marking, bench_multitenant, bench_overhead,
+                   bench_pressure, bench_roofline, bench_serve,
+                   bench_stream, bench_topology)
 
     def graph(jp):
         bench_graph.run()
@@ -67,6 +67,8 @@ def main() -> None:
             n_users=bench_serve.N_USERS,
             reqs_per_user=bench_serve.REQS_PER_USER,
             json_path=jp, smoke=False),
+        "calibrate": lambda jp: bench_calibrate.run_calibrate(
+            json_path=jp, smoke=False),
     }
     json_names = {
         "graph": "BENCH_graph.json",
@@ -75,6 +77,7 @@ def main() -> None:
         "stream": "BENCH_stream.json",
         "multitenant": "BENCH_multitenant.json",
         "serve": "BENCH_serve.json",
+        "calibrate": "BENCH_calibrate.json",
     }
     only = set(args.only.split(",")) if args.only else None
     json_dir = Path(args.json_dir) if args.json_dir else None

@@ -56,17 +56,32 @@ def _jzip(a, b):
     return a * b
 
 
-@rimms.op("fft", kinds=("cpu",))
+# Calibration input factories (ISSUE 10): representative inputs at a
+# requested total byte size, so `session.calibrate()` can measure the
+# radar ops' real kernels per PE kind.
+def _calib_single_c64(rng, nbytes):
+    n = max(nbytes // 8, 1)
+    return [(rng.standard_normal(n)
+             + 1j * rng.standard_normal(n)).astype(C64)]
+
+
+def _calib_pair_c64(rng, nbytes):
+    n = max(nbytes // 16, 1)
+    return [(rng.standard_normal(n)
+             + 1j * rng.standard_normal(n)).astype(C64) for _ in range(2)]
+
+
+@rimms.op("fft", kinds=("cpu",), calib=_calib_single_c64)
 def _fft_cpu(ins):
     return np.fft.fft(ins[0], axis=-1).astype(C64)
 
 
-@rimms.op("ifft", kinds=("cpu",))
+@rimms.op("ifft", kinds=("cpu",), calib=_calib_single_c64)
 def _ifft_cpu(ins):
     return np.fft.ifft(ins[0], axis=-1).astype(C64)
 
 
-@rimms.op("zip", kinds=("cpu",))
+@rimms.op("zip", kinds=("cpu",), calib=_calib_pair_c64)
 def _zip_cpu(ins):
     return (ins[0] * ins[1]).astype(C64)
 

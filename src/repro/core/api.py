@@ -59,12 +59,15 @@ and Jain's-index fairness evidence.
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .calibrate import (DEFAULT_VARIANT, CalibrationTable,  # noqa: F401
+                        resolve_calibration)
 from .executor import StreamExecutor
 from .graph import GraphBuilder
 from .hete import HeteContext, HeteData
@@ -77,11 +80,11 @@ from .telemetry import Sampler, metrics_text, serve_metrics, slo_eval
 from .trace import (MetricsRegistry, TraceCollector, trace,  # noqa: F401
                     trace_lint)
 
-__all__ = ["OpRegistry", "op", "default_registry", "BufferFuture",
-           "Session", "SessionClient", "SessionClosedError",
-           "TraceCollector", "MetricsRegistry", "Sampler", "trace",
-           "trace_lint", "BACKENDS", "resolve_backend", "register_platform",
-           "platform_names"]
+__all__ = ["OpRegistry", "OpVariant", "op", "default_registry",
+           "BufferFuture", "Session", "SessionClient", "SessionClosedError",
+           "CalibrationTable", "DEFAULT_VARIANT", "TraceCollector",
+           "MetricsRegistry", "Sampler", "trace", "trace_lint", "BACKENDS",
+           "resolve_backend", "register_platform", "platform_names"]
 
 
 class SessionClosedError(RuntimeError):
@@ -90,33 +93,63 @@ class SessionClosedError(RuntimeError):
     enqueueing onto a drained stream or a dead worker pool."""
 
 
+@dataclasses.dataclass(frozen=True)
+class OpVariant:
+    """One registered kernel variant: the callable plus the launch
+    params bound at registration (merged *under* per-task params at
+    dispatch) and an optional calibration input factory
+    ``(rng, nbytes) -> list[ndarray]`` the measurement harness uses."""
+
+    op: str
+    kind: str
+    variant: str
+    fn: Callable
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    calib: Optional[Callable] = None
+
+
 class OpRegistry:
-    """Kernel variants keyed on ``(op, pe_kind)`` — the dispatch table
-    the :func:`op` decorator fills and a :class:`Session` installs into
-    its :class:`~repro.core.runtime.Runtime`.
+    """Kernel variants keyed on ``(op, pe_kind, variant)`` — the
+    dispatch table the :func:`op` decorator fills and a :class:`Session`
+    installs into its :class:`~repro.core.runtime.Runtime`.
 
     A variant is ``fn(inputs: list, **params) -> array | tuple`` exactly
-    like :meth:`Runtime.register_kernel` expects; registering the same
-    ``(op, kind)`` twice with a different function raises unless
-    ``replace=True`` (kernels are identity, not configuration).
+    like :meth:`Runtime.register_kernel` expects.  The **default**
+    variant (no ``variant=`` at registration) keeps the historical
+    single-registration behavior: registering the same ``(op, kind)``
+    twice with a different function raises unless ``replace=True``
+    (kernels are identity, not configuration) — and so does re-using a
+    named variant.  Named variants (ISSUE 10) are tuning candidates:
+    same math, different launch parameters; the autotuner races them and
+    :meth:`select` answers which one a calibration table says to run.
     """
 
     def __init__(self) -> None:
-        self._variants: Dict[Tuple[str, str], Callable] = {}
+        # (op, kind) -> {variant name -> OpVariant}; DEFAULT_VARIANT is
+        # the reference registration every current call site resolves.
+        self._variants: Dict[Tuple[str, str], Dict[str, OpVariant]] = {}
 
     def register(self, op_name: str, kind: str, fn: Callable, *,
+                 variant: Optional[str] = None,
+                 params: Optional[Dict[str, Any]] = None,
+                 calib: Optional[Callable] = None,
                  replace: bool = False) -> None:
+        vname = variant or DEFAULT_VARIANT
         key = (op_name, kind)
-        prev = self._variants.get(key)
-        if prev is not None and prev is not fn and not replace:
+        group = self._variants.setdefault(key, {})
+        prev = group.get(vname)
+        if prev is not None and prev.fn is not fn and not replace:
             raise ValueError(
-                f"op variant {key} already registered "
-                f"({prev.__name__}); pass replace=True to override"
+                f"op variant {key + (vname,)} already registered "
+                f"({prev.fn.__name__}); pass replace=True to override"
             )
-        self._variants[key] = fn
+        group[vname] = OpVariant(op_name, kind, vname, fn,
+                                 dict(params or {}), calib)
 
+    # -- default-variant fast path (all pre-ISSUE-10 call sites) ------------
     def get(self, op_name: str, kind: str) -> Optional[Callable]:
-        return self._variants.get((op_name, kind))
+        var = self._variants.get((op_name, kind), {}).get(DEFAULT_VARIANT)
+        return var.fn if var is not None else None
 
     def kinds(self, op_name: str) -> List[str]:
         """PE kinds with a registered variant of ``op_name``."""
@@ -128,19 +161,72 @@ class OpRegistry:
     def __len__(self) -> int:
         return len(self._variants)
 
+    # -- variant surface (ISSUE 10) ------------------------------------------
+    def variants(self, op_name: str, kind: str) -> List[str]:
+        """Registered variant names for ``(op, kind)``, default first."""
+        names = sorted(self._variants.get((op_name, kind), {}))
+        if DEFAULT_VARIANT in names:
+            names.remove(DEFAULT_VARIANT)
+            names.insert(0, DEFAULT_VARIANT)
+        return names
+
+    def variant(self, op_name: str, kind: str, name: str) -> OpVariant:
+        group = self._variants.get((op_name, kind), {})
+        if name not in group:
+            raise KeyError(
+                f"no variant {name!r} of op {(op_name, kind)}; registered: "
+                f"{self.variants(op_name, kind)}")
+        return group[name]
+
+    def select(self, op_name: str, kind: str, nbytes,
+               table=None) -> OpVariant:
+        """The variant to dispatch for ``nbytes`` of input (an int, or
+        anything with ``.nbytes``): the calibration ``table``'s winner
+        for this shape bucket when one is recorded and registered, else
+        the default variant."""
+        n = int(getattr(nbytes, "nbytes", nbytes))
+        group = self._variants.get((op_name, kind), {})
+        if table is not None:
+            best = table.best_variant(op_name, kind, n)
+            if best is not None and best in group:
+                return group[best]
+        var = group.get(DEFAULT_VARIANT)
+        if var is None:
+            raise KeyError(f"op {(op_name, kind)} has no default variant")
+        return var
+
+    def input_maker(self, op_name: str) -> Optional[Callable]:
+        """The op's calibration input factory ``(rng, nbytes) ->
+        list[ndarray]`` — taken from any variant that declared one
+        (kind-independent: the same arrays feed every PE kind)."""
+        for (o, _k), group in sorted(self._variants.items()):
+            if o != op_name:
+                continue
+            for vname in sorted(group):
+                if group[vname].calib is not None:
+                    return group[vname].calib
+        return None
+
     def install(self, rt: Runtime, *, missing_only: bool = False,
                 extend_supports: Sequence[str] = ()) -> None:
         """Register every variant into ``rt``.  ``missing_only`` keeps
         kernels the runtime already has (so a session never clobbers a
-        hand-registered override).  ``extend_supports`` names the
-        *general-purpose* PE kinds (typically ``("cpu", "gpu")``) whose
-        PEs additionally advertise every op they now have a kernel for —
-        restricted accelerator kinds (a zip engine is a zip engine) keep
-        the op sets their platform description declared."""
-        for (op_name, kind), fn in self._variants.items():
+        hand-registered override) — keyed on the default variant, with
+        named variants of the op riding along.  ``extend_supports``
+        names the *general-purpose* PE kinds (typically
+        ``("cpu", "gpu")``) whose PEs additionally advertise every op
+        they now have a kernel for — restricted accelerator kinds (a zip
+        engine is a zip engine) keep the op sets their platform
+        description declared."""
+        for (op_name, kind), group in self._variants.items():
             if missing_only and (op_name, kind) in rt._kernels:
                 continue
-            rt.register_kernel(op_name, kind, fn)
+            for vname, var in group.items():
+                if vname == DEFAULT_VARIANT:
+                    rt.register_kernel(op_name, kind, var.fn)
+                else:
+                    rt.register_kernel(op_name, kind, var.fn,
+                                       variant=vname, params=var.params)
         for pe in rt.pes:
             if pe.kind in extend_supports:
                 extra = {o for (o, k) in self._variants if k == pe.kind}
@@ -154,6 +240,9 @@ default_registry = OpRegistry()
 
 def op(name: str, *, kinds: Union[str, Sequence[str]],
        registry: Optional[OpRegistry] = None,
+       variant: Optional[str] = None,
+       params: Optional[Dict[str, Any]] = None,
+       calib: Optional[Callable] = None,
        replace: bool = False) -> Callable:
     """Decorator: register the function as op ``name``'s kernel variant
     for each PE kind in ``kinds``::
@@ -161,6 +250,15 @@ def op(name: str, *, kinds: Union[str, Sequence[str]],
         @rimms.op("fft", kinds=("acc", "gpu"))
         def fft_device(ins):
             return _jfft(ins[0])
+
+    Without ``variant=`` this is the op's **default** (reference)
+    registration, with the historical duplicate-registration error.
+    ``variant="block64", params={"block_rows": 64}`` registers a tuning
+    candidate instead (ISSUE 10): same math as the default, launch
+    ``params`` bound at dispatch, raced by the autotuner and selected
+    per shape bucket from a calibration table.  ``calib`` attaches the
+    op's calibration input factory ``(rng, nbytes) -> list[ndarray]`` so
+    the measurement harness can synthesize representative inputs.
 
     The function is returned unchanged (still directly callable)."""
     kind_list = (kinds,) if isinstance(kinds, str) else tuple(kinds)
@@ -170,7 +268,8 @@ def op(name: str, *, kinds: Union[str, Sequence[str]],
     def deco(fn: Callable) -> Callable:
         reg = registry if registry is not None else default_registry
         for k in kind_list:
-            reg.register(name, k, fn, replace=replace)
+            reg.register(name, k, fn, variant=variant, params=params,
+                         calib=calib, replace=replace)
         return fn
 
     return deco
@@ -331,6 +430,7 @@ class Session:
         trace: Union[bool, TraceCollector, None] = None,
         backend: Optional[str] = None,
         sampler_period: Optional[float] = None,
+        calibration: Union[None, str, CalibrationTable] = None,
     ) -> None:
         self.runtime = runtime
         # Execution backend (ISSUE 7): None adopts the runtime's;
@@ -338,6 +438,16 @@ class Session:
         # raise listing the valid choices).
         self.backend = runtime.set_backend(backend)
         self.context: HeteContext = runtime.context
+        # Measured calibration (ISSUE 10): a table — or a path to one,
+        # or "auto" ($RIMMS_CALIBRATION) — attached at construction so
+        # HEFT placement prices work from measured throughput and
+        # _run_kernel dispatches tuned variants.  An embedded divergence
+        # snapshot seeds the runtime's live EMAs.
+        self.calibration = resolve_calibration(calibration)
+        if self.calibration is not None:
+            runtime.set_calibration(self.calibration)
+            if self.calibration.divergence:
+                runtime.divergence.merge(self.calibration.divergence)
         # Full-lifecycle tracing (ISSUE 6): off by default.  ``trace=True``
         # attaches a fresh TraceCollector to the context; pass an existing
         # collector to aggregate several sessions into one trace.
@@ -400,6 +510,7 @@ class Session:
         trace: Union[bool, TraceCollector, None] = None,
         backend: Optional[str] = None,
         sampler_period: Optional[float] = None,
+        calibration: Union[None, str, CalibrationTable] = None,
         **soc_kwargs: Any,
     ) -> "Session":
         """Session over a fresh emulated SoC (see
@@ -438,7 +549,7 @@ class Session:
         return cls(rt, prefetch=prefetch, window=window, registry=registry,
                    qos=qos, client_window=client_window,
                    global_window=global_window, trace=trace,
-                   sampler_period=sampler_period)
+                   sampler_period=sampler_period, calibration=calibration)
 
     # -- tenants (ISSUE 5) ---------------------------------------------------
     def client(self, name: Optional[str] = None, *,
@@ -785,6 +896,32 @@ class Session:
                     "slo_violation", "slo", f"{run}/tenant:{client}", end,
                     args={"task": nodes[i].name, "node": i,
                           "latency_s": latency, "objective_s": objective})
+
+    # -- calibration (ISSUE 10) ----------------------------------------------
+    def calibrate(self, **kwargs) -> CalibrationTable:
+        """Run the measurement harness over this session's registry and
+        runtime (see :func:`repro.core.calibrate.calibrate`), attach the
+        resulting table to the runtime (placement and variant dispatch
+        use it immediately), and return it.  Extends the session's
+        existing table when one is attached."""
+        from .calibrate import calibrate as _calibrate
+
+        table = _calibrate(self, table=self.calibration, **kwargs)
+        self.calibration = table
+        self.runtime.set_calibration(table)
+        return table
+
+    def save_calibration(self, path) -> CalibrationTable:
+        """Snapshot this session's calibration table — plus the
+        runtime's live divergence EMAs — to ``path`` (the one documented
+        persistence entry point; the raw divergence-JSON path is
+        deprecated).  A session without a table saves one holding just
+        the divergence snapshot.  Returns the saved table."""
+        table = self.calibration if self.calibration is not None \
+            else CalibrationTable()
+        table.divergence = self.runtime.divergence.state()
+        table.save(path)
+        return table
 
     # -- telemetry (ISSUE 8) -------------------------------------------------
     def start_sampler(self, *, period: float = 0.0,

@@ -1170,6 +1170,12 @@ class StreamExecutor(_ExecutorBase):
             "scheduler": self.scheduler,
             "policy": self.rt.policy,
             "backend": self.rt.backend,
+            # placement cost source: measured calibration cells when a
+            # table is attached, BASE_THROUGHPUT priors otherwise
+            "calibrated": self.rt.calibration is not None,
+            "calibration_cells": (
+                len(self.rt.calibration)
+                if self.rt.calibration is not None else 0),
             "prefetch": self.prefetch,
             "topology": self._topo.name if self._topo is not None else None,
             "per_pe_busy_model_s": per_pe,

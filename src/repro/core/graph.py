@@ -213,6 +213,16 @@ class CostModel:
     per-op weight (FFTs cost ~5× an elementwise zip per byte).  Every
     measured kernel execution refines the estimate via an EMA of observed
     seconds-per-byte, so schedules improve as the run progresses.
+
+    Measured calibration (ISSUE 10): when a
+    :class:`~repro.core.calibrate.CalibrationTable` is attached
+    (:meth:`set_calibration` — e.g. via ``Session(calibration=...)``),
+    :meth:`prior_estimate` consults the table's measured cell for the
+    exact ``(op, pe_kind, shape bucket)`` *before* falling back to the
+    ``BASE_THROUGHPUT`` prior, so placement and the modeled replays
+    price work from measured hardware.  No table attached (the default)
+    keeps the historical deterministic priors — committed bench
+    baselines depend on that.
     """
 
     BASE_THROUGHPUT = {  # bytes/second prior per PE kind
@@ -224,15 +234,32 @@ class CostModel:
     LAUNCH_LATENCY_S = 20e-6  # per-dispatch overhead floor
     EMA = 0.3
 
-    def __init__(self) -> None:
+    def __init__(self, calibration=None) -> None:
         self._observed: Dict[Tuple[str, str], float] = {}  # s per byte
         self._lock = threading.Lock()
+        self._calibration = calibration
+
+    def set_calibration(self, table) -> None:
+        """Attach (or detach with None) a calibration table; measured
+        cells then take precedence over the throughput priors."""
+        self._calibration = table
+
+    @property
+    def calibration(self):
+        return self._calibration
 
     def prior_estimate(self, op: str, pe_kind: str, nbytes: int) -> float:
-        """Static (throughput-prior) estimate — deterministic, used for the
-        schedule *simulation* so serial and graph modeled makespans are
-        directly comparable (measured kernel times on this box are
-        inflated by cross-PE CPU contention in graph mode)."""
+        """Static estimate — deterministic, used for the schedule
+        *simulation* so serial and graph modeled makespans are directly
+        comparable (measured kernel times on this box are inflated by
+        cross-PE CPU contention in graph mode).  A measured calibration
+        cell for this exact (op, kind, bucket) wins; missing cells fall
+        back to the throughput prior."""
+        if self._calibration is not None:
+            measured = self._calibration.estimate_s(
+                op, pe_kind, nbytes, launch_s=self.LAUNCH_LATENCY_S)
+            if measured is not None:
+                return measured
         bw = self.BASE_THROUGHPUT.get(pe_kind, 1.0e9)
         per_byte = self.OP_WEIGHT.get(op, 2.0) / bw
         return self.LAUNCH_LATENCY_S + nbytes * per_byte

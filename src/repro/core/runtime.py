@@ -222,6 +222,16 @@ class Runtime:
         self._rr_state: Dict[str, int] = {}
         # kernels: (op, pe_kind) -> callable(list_of_arrays, **params) -> tuple
         self._kernels: Dict[tuple, Callable] = {}
+        # tuned kernel variants (ISSUE 10): (op, pe_kind, variant name)
+        # -> (callable, bound launch params) — dispatched when an
+        # attached calibration table names a winner for the shape bucket
+        self._variant_kernels: Dict[tuple, Tuple[Callable, dict]] = {}
+        #: attached CalibrationTable (None = default dispatch + priors)
+        self.calibration = None
+        #: non-default variant dispatches, (op, pe kind, variant) per
+        #: call — outputs are bit-identical by construction, so tests
+        #: and benches assert selection through this log
+        self.variant_log: List[tuple] = []
         self.task_log: List[tuple] = []  # (task name/op, pe name) for tests
         self.timeline = Timeline()  # replaced per run/run_graph
         self.last_makespan_model = 0.0
@@ -288,14 +298,38 @@ class Runtime:
         sessions deliberately do *not* reset between barriers: the
         stream is one continuous run."""
         self.task_log = []
+        self.variant_log = []
         self._rr_state = {}
         self.timeline = Timeline()
         self.last_makespan_model = 0.0
         self.last_report = None
 
     # -- registration -------------------------------------------------------
-    def register_kernel(self, op: str, pe_kind: str, fn: Callable) -> None:
-        self._kernels[(op, pe_kind)] = fn
+    def register_kernel(self, op: str, pe_kind: str, fn: Callable, *,
+                        variant: Optional[str] = None,
+                        params: Optional[Dict[str, Any]] = None) -> None:
+        """Register a kernel.  Without ``variant`` this is the op's
+        default (reference) kernel — the historical behavior every call
+        site relies on.  With ``variant`` it is a tuned candidate
+        (ISSUE 10): ``params`` are its launch parameters, merged *under*
+        per-task params at dispatch; it only runs when the attached
+        calibration table names it the winner for the task's shape
+        bucket."""
+        if variant is None:
+            self._kernels[(op, pe_kind)] = fn
+        else:
+            self._variant_kernels[(op, pe_kind, variant)] = (
+                fn, dict(params or {}))
+
+    def set_calibration(self, table) -> None:
+        """Attach a :class:`~repro.core.calibrate.CalibrationTable`:
+        the cost model prices from its measured cells
+        (:meth:`CostModel.set_calibration
+        <repro.core.graph.CostModel.set_calibration>`) and
+        :meth:`_run_kernel` dispatches its winning variants.  ``None``
+        detaches (default priors + default kernels)."""
+        self.calibration = table
+        self.cost_model.set_calibration(table)
 
     # -- scheduling -----------------------------------------------------------
     def _eligible(self, task: Task) -> List[PE]:
@@ -438,9 +472,9 @@ class Runtime:
         if self.backend == "process" and self._proc_eligible(pe):
             outs, dt = self._run_kernel_process(task, pe, ins)
         else:
-            fn = self._kernels[(task.op, pe.kind)]
+            fn, params, _ = self._select_kernel(task, pe)
             t0 = time.perf_counter()
-            outs = _as_tuple(fn(ins, **task.params))
+            outs = _as_tuple(fn(ins, **params))
             if pe.location != HOST:
                 try:
                     import jax
@@ -454,17 +488,36 @@ class Runtime:
             self.cost_model.prior_estimate(task.op, pe.kind, task.in_bytes))
         return outs, dt
 
+    def _select_kernel(self, task: Task, pe: PE) -> Tuple[Callable, dict, str]:
+        """Variant-aware kernel lookup (ISSUE 10): the attached
+        calibration table's winning variant for the task's shape bucket
+        when it is registered (bit-identical to the default by the
+        autotuner's eligibility bar), else the default kernel.  Returns
+        ``(fn, merged params, variant name)`` — per-task params override
+        the variant's bound launch params.  Non-default selections are
+        appended to :attr:`variant_log`."""
+        if self.calibration is not None:
+            vname = self.calibration.best_variant(task.op, pe.kind,
+                                                  task.in_bytes)
+            if vname is not None:
+                entry = self._variant_kernels.get((task.op, pe.kind, vname))
+                if entry is not None:
+                    fn, vparams = entry
+                    self.variant_log.append((task.op, pe.kind, vname))
+                    return fn, {**vparams, **task.params}, vname
+        return self._kernels[(task.op, pe.kind)], dict(task.params), "default"
+
     def _run_kernel_process(self, task: Task, pe: PE,
                             ins: List[Any]) -> Tuple[tuple, float]:
         """Process-backend kernel call: ship handles to ``pe``'s worker,
         forward the worker-measured compute span onto the trace (on the
         ``pe:{name}:worker`` track, clock-offset corrected and clamped to
         the parent-observed call window)."""
-        key = (task.op, pe.kind)
-        fn = self._kernels[key]
+        fn, params, vname = self._select_kernel(task, pe)
+        key = (task.op, pe.kind, vname)
         worker = self._get_process_pool().worker(pe.name)
         worker.ensure_kernel(key, fn)
-        outs, w0, w1, k0, k1 = worker.run(key, ins, task.params)
+        outs, w0, w1, k0, k1 = worker.run(key, ins, params)
         dt = w1 - w0
         self.cost_model.observe(task.op, pe.kind, task.in_bytes, dt)
         tracer = self.context.tracer

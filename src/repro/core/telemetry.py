@@ -45,6 +45,7 @@ import math
 import re
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -235,6 +236,13 @@ class DivergenceMonitor:
         return self
 
     def save_json(self, path: str) -> None:
+        """.. deprecated:: ISSUE 10
+           Raw divergence-JSON plumbing is superseded by the calibration
+           table (``Session.save_calibration(path)`` embeds the same
+           divergence snapshot in a "rimms-calib-v1" file).  One
+           :class:`DeprecationWarning` per process."""
+        _warn_divergence_json("save_json",
+                              "Session.save_calibration(path)")
         with open(path, "w") as fh:
             json.dump({"format": "rimms-divergence-v1",
                        "state": self.state(), "table": self.table()},
@@ -242,11 +250,37 @@ class DivergenceMonitor:
 
     @classmethod
     def load_json(cls, path: str) -> "DivergenceMonitor":
+        """.. deprecated:: ISSUE 10
+           Load through ``Session(calibration=path)`` instead — a
+           calibration table's embedded divergence snapshot merges into
+           the runtime's live monitor at construction."""
+        _warn_divergence_json("load_json", "Session(calibration=path)")
         with open(path) as fh:
             doc = json.load(fh)
         mon = cls(register=False)
         mon.merge(doc.get("state", doc))
         return mon
+
+
+# One DeprecationWarning per process (same pattern as the ISSUE-7
+# Runtime.run/run_graph deprecation): the first raw divergence-JSON call
+# warns, later ones stay quiet.
+_divergence_json_warned = False
+
+
+def _warn_divergence_json(which: str, instead: str) -> None:
+    global _divergence_json_warned
+    if _divergence_json_warned:
+        return
+    _divergence_json_warned = True
+    warnings.warn(
+        f"DivergenceMonitor.{which}() raw divergence-JSON plumbing is "
+        f"deprecated; use the calibration-table entry point instead "
+        f"({instead} — 'rimms-calib-v1' files embed the divergence "
+        f"snapshot).",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -48,14 +48,17 @@ def _fft_kernel(n, xr_ref, xi_ref, or_ref, oi_ref):
     oi_ref[...] = xi.reshape(B, n)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fft_planes(xr, xi, *, interpret: bool = INTERPRET):
-    """xr, xi: (rows, N) f32 → FFT along axis 1 (rows padded to tiles)."""
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fft_planes(xr, xi, *, block_rows: int = BLOCK_ROWS,
+               interpret: bool = INTERPRET):
+    """xr, xi: (rows, N) f32 → FFT along axis 1 (rows padded to tiles).
+    ``block_rows`` is a pure launch parameter — rows are independent, so
+    any tiling produces bit-identical planes (autotuned, ISSUE 10)."""
     rows, n = xr.shape
-    spec = pl.BlockSpec((BLOCK_ROWS, n), lambda i: (i, 0))
+    spec = pl.BlockSpec((block_rows, n), lambda i: (i, 0))
     return pl.pallas_call(
         functools.partial(_fft_kernel, n),
-        grid=(pl.cdiv(rows, BLOCK_ROWS),),
+        grid=(pl.cdiv(rows, block_rows),),
         in_specs=[spec, spec],
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct((rows, n), jnp.float32)] * 2,

@@ -7,19 +7,22 @@ import jax.numpy as jnp
 from .fft import BLOCK_ROWS, fft_planes
 
 
-def fft(x: jnp.ndarray, forward: bool = True) -> jnp.ndarray:
+def fft(x: jnp.ndarray, forward: bool = True, *,
+        block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
     """FFT along the last axis via the Pallas kernel.
-    IFFT uses the conjugation identity ifft(x) = conj(fft(conj(x)))/N."""
+    IFFT uses the conjugation identity ifft(x) = conj(fft(conj(x)))/N.
+    ``block_rows`` tunes the batch tile (bit-identical across values)."""
     shape = x.shape
     n = shape[-1]
     rows = int(jnp.prod(jnp.asarray(shape[:-1]))) if len(shape) > 1 else 1
     xf = x.reshape(rows, n)
     if not forward:
         xf = jnp.conj(xf)
-    pad = (-rows) % BLOCK_ROWS
+    pad = (-rows) % block_rows
     xf = jnp.pad(xf, ((0, pad), (0, 0)))
     orr, oi = fft_planes(
-        jnp.real(xf).astype(jnp.float32), jnp.imag(xf).astype(jnp.float32)
+        jnp.real(xf).astype(jnp.float32), jnp.imag(xf).astype(jnp.float32),
+        block_rows=block_rows,
     )
     out = (orr + 1j * oi).astype(jnp.complex64)[:rows]
     if not forward:

@@ -7,13 +7,18 @@ import jax.numpy as jnp
 from .rg_lru import LANES, rg_lru_scan as _kernel
 
 
-def rg_lru_scan(a, b, h0):
+def rg_lru_scan(a, b, h0, *, block_lanes: int = LANES):
+    """``block_lanes`` tunes lanes per grid step (bit-identical across
+    values); clamped down to the largest valid divisor of padded D."""
     B, S, D = a.shape
     pad = (-D) % LANES
     if pad:
         a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
         b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
         h0 = jnp.pad(h0, ((0, 0), (0, pad)))
+    dp = D + pad
+    bl = max(lane for lane in range(LANES, min(block_lanes, dp) + 1, LANES)
+             if dp % lane == 0)
     hs, hN = _kernel(a.astype(jnp.float32), b.astype(jnp.float32),
-                     h0.astype(jnp.float32))
+                     h0.astype(jnp.float32), block_lanes=bl)
     return hs[..., :D], hN[..., :D]

@@ -35,14 +35,18 @@ def _rg_lru_kernel(a_ref, b_ref, h0_ref, o_ref, hN_ref):
     hN_ref[0] = h
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def rg_lru_scan(a, b, h0, *, interpret: bool = INTERPRET):
+@functools.partial(jax.jit, static_argnames=("block_lanes", "interpret"))
+def rg_lru_scan(a, b, h0, *, block_lanes: int = LANES,
+                interpret: bool = INTERPRET):
     """a, b: (B, S, D) f32; h0: (B, D) initial state.
-    Returns (h_seq (B,S,D), h_final (B,D))."""
+    Returns (h_seq (B,S,D), h_final (B,D)).  ``block_lanes`` (a multiple
+    of 128 dividing D) tunes lanes per grid step — the recurrence is
+    elementwise over lanes, so any tiling is bit-identical (ISSUE 10)."""
     B, S, D = a.shape
-    grid = (B, D // LANES)
-    seq_spec = pl.BlockSpec((1, S, LANES), lambda i, j: (i, 0, j))
-    vec_spec = pl.BlockSpec((1, LANES), lambda i, j: (i, j))
+    assert block_lanes % LANES == 0 and D % block_lanes == 0, (D, block_lanes)
+    grid = (B, D // block_lanes)
+    seq_spec = pl.BlockSpec((1, S, block_lanes), lambda i, j: (i, 0, j))
+    vec_spec = pl.BlockSpec((1, block_lanes), lambda i, j: (i, j))
     return pl.pallas_call(
         _rg_lru_kernel,
         grid=grid,

@@ -5,11 +5,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .zip import LANES, zip_mul_planes
+from .zip import BLOCK_ROWS, LANES, zip_mul_planes
 
 
-def zip_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """Pointwise complex multiply via the Pallas ZIP kernel."""
+def zip_mul(a: jnp.ndarray, b: jnp.ndarray, *,
+            block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """Pointwise complex multiply via the Pallas ZIP kernel.
+    ``block_rows`` tunes the row tile (bit-identical across values)."""
     shape = a.shape
     n = a.size
     pad = (-n) % LANES
@@ -19,6 +21,6 @@ def zip_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         return jnp.real(f).astype(jnp.float32), jnp.imag(f).astype(jnp.float32)
     ar, ai = planes(a)
     br, bi = planes(b)
-    orr, oi = zip_mul_planes(ar, ai, br, bi)
+    orr, oi = zip_mul_planes(ar, ai, br, bi, block_rows=block_rows)
     out = (orr + 1j * oi).astype(jnp.complex64).reshape(-1)[:n]
     return out.reshape(shape)

@@ -28,12 +28,15 @@ def _zip_kernel(ar_ref, ai_ref, br_ref, bi_ref, or_ref, oi_ref):
     oi_ref[...] = ar * bi + ai * br
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def zip_mul_planes(ar, ai, br, bi, *, interpret: bool = INTERPRET):
-    """(rows, 128) f32 planes → complex product planes."""
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def zip_mul_planes(ar, ai, br, bi, *, block_rows: int = BLOCK_ROWS,
+                   interpret: bool = INTERPRET):
+    """(rows, 128) f32 planes → complex product planes.  ``block_rows``
+    is a pure launch parameter (elementwise op → bit-identical tiling,
+    autotuned in ISSUE 10)."""
     rows = ar.shape[0]
-    grid = (pl.cdiv(rows, BLOCK_ROWS),)
-    spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    grid = (pl.cdiv(rows, block_rows),)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
     return pl.pallas_call(
         _zip_kernel,
         grid=grid,

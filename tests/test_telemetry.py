@@ -6,8 +6,10 @@ import json
 import math
 import threading
 import urllib.request
+import warnings
 
 import numpy as np
+import pytest
 
 from repro.apps.radar import make_session, submit_2fzf
 from repro.core import telemetry
@@ -151,11 +153,17 @@ def test_divergence_merge_and_json_roundtrip(tmp_path):
     # count-weighted EMA blend lands between the two monitors' EMAs
     assert 1.5 < t["compute/fft/gpu/<=1KiB"]["ema_ratio"] < 3.0
 
+    # The raw-JSON path is deprecated (ISSUE 10) in favor of calibration
+    # tables: exactly one DeprecationWarning per process, then silence.
     path = tmp_path / "divergence.json"
-    merged.save_json(str(path))
+    telemetry._divergence_json_warned = False
+    with pytest.warns(DeprecationWarning, match="calibration"):
+        merged.save_json(str(path))
     doc = json.loads(path.read_text())
     assert doc["format"] == "rimms-divergence-v1"
-    back = DivergenceMonitor.load_json(str(path))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second call must stay quiet
+        back = DivergenceMonitor.load_json(str(path))
     assert back.table() == t
 
 
